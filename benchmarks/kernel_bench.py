@@ -1,0 +1,80 @@
+"""Micro-benchmarks for the Pallas kernels' XLA-path wrappers on CPU.
+
+On this container the kernels execute via their reference path (interpret
+mode is Python-slow and only used for correctness); these timings track the
+*wrapper overhead + XLA fallback* cost per call and the derived bandwidth,
+and serve as the regression harness the TPU deployment reuses.
+Output: ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn: Callable, *args, reps: int = 10) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run_all() -> List[str]:
+    rows = []
+    # fused preprocess: the streaming hot path
+    from repro.kernels.fused_preprocess.ops import fused_preprocess
+
+    frames = jnp.asarray(
+        np.random.randint(0, 255, (16, 3, 128, 256), np.uint8))
+    us = _time(lambda f: fused_preprocess(f, crop=(64, 0, 64, 256), factor=2),
+               frames)
+    mb = 16 * 3 * 128 * 256 / 2**20
+    rows.append(f"fused_preprocess_16f,{us:.1f},{mb/(us/1e6)/1024:.2f}GiB/s")
+
+    # frame diff (skip operator)
+    from repro.kernels.frame_diff.ops import frame_diff
+
+    prev = jnp.asarray(np.random.randint(0, 255, (16, 3, 128, 256), np.uint8))
+    us = _time(lambda a, b: frame_diff(a, b, regions=(4, 8)), frames, prev)
+    rows.append(f"frame_diff_16f,{us:.1f},{2*mb/(us/1e6)/1024:.2f}GiB/s")
+
+    # flash attention fallback (prefill path)
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    q = jnp.asarray(np.random.randn(1, 1024, 8, 64), jnp.float32)
+    k = jnp.asarray(np.random.randn(1, 1024, 2, 64), jnp.float32)
+    us = _time(lambda q, k: flash_attention(q, k, k, causal=True), q, k)
+    fl = 2 * 2 * 1024 * 1024 * 8 * 64 / 2  # causal half
+    rows.append(f"flash_attention_1k,{us:.1f},{fl/(us/1e6)/1e9:.2f}GFLOP/s")
+
+    # int8 matmul fallback
+    from repro.kernels.int8_matmul.ref import quantize_colwise
+    from repro.kernels.int8_matmul.ops import matmul_int8_dynamic
+
+    x = jnp.asarray(np.random.randn(256, 512), jnp.float32)
+    w = jnp.asarray(np.random.randn(512, 512), jnp.float32)
+    wq, sw = quantize_colwise(w)
+    us = _time(lambda x: matmul_int8_dynamic(x, wq, sw), x)
+    fl = 2 * 256 * 512 * 512
+    rows.append(f"int8_matmul_256x512x512,{us:.1f},{fl/(us/1e6)/1e9:.2f}GOP/s")
+
+    # SSD scan
+    from repro.kernels.ssd_scan.ops import ssd
+
+    B, L, H, P, G, N = 2, 512, 8, 32, 1, 32
+    xs = jnp.asarray(np.random.randn(B, L, H, P), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(np.random.randn(B, L, H), jnp.float32))
+    a = -jnp.exp(jnp.asarray(np.random.randn(H) * 0.2, jnp.float32))
+    bm = jnp.asarray(np.random.randn(B, L, G, N) * 0.3, jnp.float32)
+    cm = jnp.asarray(np.random.randn(B, L, G, N) * 0.3, jnp.float32)
+    d = jnp.ones((H,))
+    us = _time(lambda x: ssd(x, dt, a, bm, cm, d, chunk=128), xs)
+    rows.append(f"ssd_scan_b2l512,{us:.1f},chunked")
+    return rows

@@ -1,0 +1,47 @@
+"""Benchmark driver: one section per paper table/figure + substrate benches.
+
+Prints ``name,us_per_call_or_metric,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-samsara]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fig1b only for the Saṃsāra section")
+    ap.add_argument("--skip-samsara", action="store_true")
+    args = ap.parse_args()
+
+    rows = []
+    sections = []
+    from benchmarks import kernel_bench, serving_bench
+
+    sections.append(("kernels", kernel_bench.run_all))
+    sections.append(("serving", serving_bench.run_all))
+    if not args.skip_samsara:
+        from benchmarks import samsara_bench
+
+        sections.append(("samsara",
+                         lambda: samsara_bench.run_all(quick=args.quick)))
+
+    print("name,us_per_call,derived")
+    ok = True
+    for name, fn in sections:
+        try:
+            for row in fn():
+                print(row, flush=True)
+                rows.append(row)
+        except Exception:  # noqa: BLE001
+            ok = False
+            print(f"{name},ERROR,{traceback.format_exc()[-300:]!r}")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Saṃsāra benchmarks — one function per paper table/figure.
+
+  fig1b_q8_naive_vs_optimized : the running example (Fig 1b): naive vs
+                                fully-optimized FPS on the stolen-car query.
+  fig5_end_to_end             : all 13 queries, naive vs optimized FPS +
+                                query accuracy (Fig 5 + the ~7% accuracy
+                                claim).
+  table2_ablation             : min/avg/max speedup per optimization phase
+                                (semantic / +logical / +physical), Table 2.
+
+Wall-clock numbers are CPU-scale; the *relative* speedups are the paper's
+claims being reproduced.  Results are written to reports/benchmarks/.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.superopt import SuperOptimizer
+from repro.data import TollBoothStream, VolleyballStream
+from repro.queries import QUERIES, get_query
+from repro.streaming.pretrain import train_stream_models
+from repro.streaming.runtime import StreamRuntime
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "benchmarks")
+
+N_FRAMES = 512          # evaluation stream length per run
+EVAL_SEED = 1234        # held-out stream seed (optimizer never sees it)
+
+
+def _stream_factory(dataset: str):
+    def make(seed: int):
+        if dataset == "tollbooth":
+            return TollBoothStream(seed=seed)
+        return VolleyballStream(seed=seed)
+
+    return make
+
+
+def _run_plan(plan, ctx, dataset: str, n_frames: int = N_FRAMES,
+              seed: int = EVAL_SEED):
+    rt = StreamRuntime(plan, ctx, micro_batch=16)
+    return rt.run(_stream_factory(dataset)(seed), n_frames)
+
+
+def _measure(qid: str, ctx, phases: Tuple[str, ...], cache: Dict
+             ) -> Dict[str, Any]:
+    """Optimize with the given phases and measure FPS + accuracy."""
+    q = get_query(qid)
+    key = (qid, phases)
+    if key in cache:
+        return cache[key]
+    if phases:
+        opt = SuperOptimizer(ctx, val_frames=256)
+        plan, report = opt.optimize(q, _stream_factory(q.dataset),
+                                    phases=phases)
+    else:
+        plan, report = q.naive_plan(), None
+    res = _run_plan(plan, ctx, q.dataset)
+    acc = q.evaluate(res)
+    out = {
+        "qid": qid, "phases": list(phases), "fps": res.fps,
+        "accuracy": acc, "mllm_frames": res.mllm_frames,
+        "n_frames": res.n_frames, "plan": plan.describe(),
+        "report": report.describe() if report else None,
+    }
+    cache[key] = out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Figure 1b — the running example
+# ---------------------------------------------------------------------------
+
+def fig1b_q8_naive_vs_optimized(ctx, cache) -> List[str]:
+    naive = _measure("Q8", ctx, (), cache)
+    full = _measure("Q8", ctx, ("semantic", "logical", "physical"), cache)
+    rows = [
+        f"fig1b,naive_fps,{naive['fps']:.2f},acc={naive['accuracy']:.3f}"
+        f";mllm_frames={naive['mllm_frames']}",
+        f"fig1b,samsara_fps,{full['fps']:.2f},acc={full['accuracy']:.3f}"
+        f";mllm_frames={full['mllm_frames']}",
+        f"fig1b,speedup,{full['fps']/naive['fps']:.2f},paper_claims~9x",
+    ]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Figure 5 — end-to-end gains, all 13 queries
+# ---------------------------------------------------------------------------
+
+def fig5_end_to_end(ctx, cache) -> List[str]:
+    rows = []
+    drops = []
+    for qid in QUERIES:
+        naive = _measure(qid, ctx, (), cache)
+        full = _measure(qid, ctx, ("semantic", "logical", "physical"), cache)
+        speedup = full["fps"] / max(naive["fps"], 1e-9)
+        drop = naive["accuracy"] - full["accuracy"]
+        drops.append(drop)
+        rows.append(
+            f"fig5,{qid},{speedup:.2f},naive_fps={naive['fps']:.2f};"
+            f"opt_fps={full['fps']:.2f};acc_naive={naive['accuracy']:.3f};"
+            f"acc_opt={full['accuracy']:.3f};"
+            f"mllm_reduction={1 - full['mllm_frames']/max(naive['mllm_frames'],1):.2%}")
+    rows.append(f"fig5,mean_accuracy_drop,{np.mean(drops):.4f},"
+                "paper_claims~0.07")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 2 — ablation by phase
+# ---------------------------------------------------------------------------
+
+def table2_ablation(ctx, cache) -> List[str]:
+    stages = {
+        "semantic": ("semantic",),
+        "+logical": ("semantic", "logical"),
+        "+physical": ("semantic", "logical", "physical"),
+    }
+    speedups: Dict[str, List[float]] = {k: [] for k in stages}
+    for qid in QUERIES:
+        naive = _measure(qid, ctx, (), cache)
+        for name, phases in stages.items():
+            r = _measure(qid, ctx, phases, cache)
+            speedups[name].append(r["fps"] / max(naive["fps"], 1e-9))
+    rows = []
+    for name in stages:
+        s = np.asarray(speedups[name])
+        rows.append(f"table2,{name},min={s.min():.2f};avg={s.mean():.2f};"
+                    f"max={s.max():.2f},paper:semantic=1.9/4.8/8.0 "
+                    "+logical=2.1/7.3/10.1 +physical=2.3/7.4/10.4")
+    return rows
+
+
+CACHE_PATH = os.path.join(REPORT_DIR, "samsara_bench.json")
+
+
+def _load_cache() -> Dict:
+    """Reuse previously-measured (query, phases) results if present —
+    the streaming benchmark is expensive on CPU; delete the JSON (or pass
+    use_cache=False) to force remeasurement."""
+    cache: Dict = {}
+    if os.path.exists(CACHE_PATH):
+        with open(CACHE_PATH) as f:
+            for key, val in json.load(f).items():
+                qid, phases = key.split("|")
+                cache[(qid, tuple(p for p in phases.split(",") if p))] = val
+    return cache
+
+
+def run_all(quick: bool = False, use_cache: bool = True) -> List[str]:
+    ctx = train_stream_models(verbose=False)
+    cache: Dict = _load_cache() if use_cache else {}
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    rows: List[str] = []
+    rows += fig1b_q8_naive_vs_optimized(ctx, cache)
+    if not quick:
+        rows += fig5_end_to_end(ctx, cache)
+        rows += table2_ablation(ctx, cache)
+    with open(CACHE_PATH, "w") as f:
+        json.dump({f"{q}|{','.join(p)}": r for (q, p), r in cache.items()},
+                  f, indent=1)
+    return rows

@@ -1,0 +1,47 @@
+"""Serving engine benchmark: continuous-batching throughput vs sequential."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import LM, materialize
+from repro.serving import Request, ServingEngine
+
+
+def run_all() -> List[str]:
+    rows = []
+    cfg = smoke_config("chatglm3-6b")
+    lm = LM(cfg, tp=1)
+    params = materialize(lm.spec(), jax.random.PRNGKey(0), jnp.float32)
+    rs = np.random.RandomState(0)
+
+    def mk_reqs(n):
+        return [Request(uid=i,
+                        prompt=list(rs.randint(2, cfg.vocab_size, 12)),
+                        max_new_tokens=8) for i in range(n)]
+
+    # sequential: one slot
+    eng1 = ServingEngine(cfg, params, max_slots=1, s_max=64, eos_id=-1)
+    reqs = mk_reqs(6)
+    eng1.run(reqs[:1])  # warmup/compile
+    t0 = time.perf_counter()
+    done = eng1.run(mk_reqs(6))
+    seq_s = time.perf_counter() - t0
+    tok = sum(len(r.output) for r in done)
+    rows.append(f"serve_sequential_6req,{seq_s*1e6/tok:.0f},{tok/seq_s:.1f}tok/s")
+
+    # continuous batching: 4 slots
+    eng4 = ServingEngine(cfg, params, max_slots=4, s_max=64, eos_id=-1)
+    eng4.run(mk_reqs(1))
+    t0 = time.perf_counter()
+    done = eng4.run(mk_reqs(6))
+    cb_s = time.perf_counter() - t0
+    tok = sum(len(r.output) for r in done)
+    rows.append(f"serve_continuous_6req,{cb_s*1e6/tok:.0f},{tok/cb_s:.1f}tok/s"
+                f";speedup={seq_s/cb_s:.2f}x")
+    return rows

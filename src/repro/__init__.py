@@ -1,0 +1,10 @@
+"""repro — Saṃsāra-JAX: a multimodal stream processing framework on TPU.
+
+Reproduction of "[Vision Paper] Towards a Multimodal Stream Processing
+System" (CS.DB 2025) as a production-grade JAX framework: streaming runtime
+with MLLM operators, the Saṃsāra super-optimizer (semantic/logical/physical),
+a sharded serving+training substrate over the assigned architecture pool,
+and Pallas TPU kernels for the compute hot spots.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,16 @@
+from repro.common.config import (
+    ArchConfig,
+    AttentionConfig,
+    MoEConfig,
+    SSMConfig,
+    BlockSpecEntry,
+    ShapeCell,
+    SHAPE_CELLS,
+)
+from repro.common.sharding import (
+    DEFAULT_RULES,
+    logical_to_mesh,
+    shard_constraint,
+    param_sharding_tree,
+)
+from repro.common.utils import pad_to_multiple, ceil_div, tree_size_bytes

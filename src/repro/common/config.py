@@ -1,0 +1,175 @@
+"""Architecture + shape-cell configuration.
+
+Every assigned architecture is expressed as an ``ArchConfig``.  Block stacks
+are described by a repeating ``block_pattern`` (one *period* of block kinds);
+the model stacks ``n_layers / len(block_pattern)`` periods with a
+``lax.scan`` so the HLO (and compile time) is O(one period), not O(n_layers).
+
+Block kind strings are ``"<mixer>+<mlp>"``:
+  mixer: ``attn`` | ``attn_local`` | ``attn_global`` | ``mamba``
+  mlp:   ``dense`` | ``moe`` | ``none``
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+from repro.common.utils import pad_to_multiple
+
+VOCAB_PAD = 256  # pad vocab to a multiple of this (divisible by model axis 16)
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    rotary_pct: float = 1.0          # chatglm/glm4 rotate half the head dims
+    qk_norm: bool = False            # qwen3-style RMSNorm on q/k
+    softcap: Optional[float] = None  # gemma2 attention logit soft-capping
+    window: Optional[int] = None     # sliding-window size for attn_local
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    aux_loss_coef: float = 1e-2
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    chunk: int = 256
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    attention: Optional[AttentionConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    block_pattern: Tuple[str, ...] = ("attn+dense",)
+    encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    post_block_norm: bool = False    # gemma2 sandwich norms
+    embed_scale: bool = False        # gemma scales embeds by sqrt(d_model)
+    final_softcap: Optional[float] = None
+    tie_embeddings: bool = True
+    frontend: Optional[str] = None   # "patch" (vlm) | "audio" — stub embeddings
+    sub_quadratic: bool = False      # eligible for long_500k
+    mlp_gated: bool = True
+    grad_accum: int = 1              # microbatch count in train_step
+    remat: bool = True
+    notes: str = ""
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to_multiple(self.vocab_size, VOCAB_PAD)
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % len(self.block_pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"pattern length {len(self.block_pattern)}"
+        )
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def has_attention(self) -> bool:
+        return any(k.split("+")[0].startswith("attn") for k in self.block_pattern)
+
+    @property
+    def has_mamba(self) -> bool:
+        return any(k.split("+")[0] == "mamba" for k in self.block_pattern)
+
+    @property
+    def has_moe(self) -> bool:
+        return any(k.split("+")[1] == "moe" for k in self.block_pattern)
+
+    def n_params_dense_equiv(self) -> int:
+        """Approximate parameter count N (all params)."""
+        from repro.models.model import param_count_estimate
+
+        return param_count_estimate(self)
+
+    def n_params_active(self) -> int:
+        """Active params per token (MoE uses top_k experts only)."""
+        from repro.models.model import param_count_estimate
+
+        return param_count_estimate(self, active_only=True)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class BlockSpecEntry:
+    """One entry of a block pattern, parsed."""
+
+    mixer: str
+    mlp: str
+
+    @staticmethod
+    def parse(kind: str) -> "BlockSpecEntry":
+        mixer, mlp = kind.split("+")
+        return BlockSpecEntry(mixer, mlp)
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPE_CELLS = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_cells(cfg: ArchConfig) -> Tuple[str, ...]:
+    """Which shape cells run for this architecture.
+
+    ``long_500k`` needs sub-quadratic attention: only SSM/hybrid archs run it
+    (skip recorded in DESIGN.md / EXPERIMENTS.md for the others).
+    """
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        cells.append("long_500k")
+    return tuple(cells)

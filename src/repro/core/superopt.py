@@ -1,0 +1,95 @@
+"""Saṃsāra: the super-optimizer orchestrator.
+
+Spends large *offline* effort specializing one long-running query to one
+stream (the paper's core bet): semantic -> logical -> physical, each phase
+validated empirically, producing an OptimizationReport whose artifacts
+(knowledge facts, selection log, rewrite rules, model-selection table) are
+the inspectable equivalent of the paper's Figures 2-4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.logical import LogicalOptimizer
+from repro.core.physical import PhysicalOptimizer
+from repro.core.semantic import SemanticOptimizer
+from repro.streaming.operators import OpContext
+from repro.streaming.plan import Plan
+from repro.streaming.runtime import StreamRuntime
+
+
+@dataclasses.dataclass
+class OptimizationReport:
+    query: str
+    naive_plan: str
+    phases: List[Dict[str, Any]]
+    final_plan: str
+
+    def describe(self) -> str:
+        lines = [f"=== Saṃsāra optimization report: {self.query} ===",
+                 f"naive:  {self.naive_plan}"]
+        for ph in self.phases:
+            lines.append(f"--- phase: {ph['phase']} ---")
+            for key in ("knowledge", "selection_log", "rules", "decisions"):
+                for item in ph.get(key, []):
+                    lines.append(f"  {item}")
+            if "model_selection" in ph:
+                lines.append(f"  model selection: {ph['model_selection']}")
+            if "validation" in ph:
+                for att in ph["validation"]:
+                    lines.append(f"  validate: acc={att['accuracy']:.3f} "
+                                 f"{att['plan']}")
+        lines.append(f"final:  {self.final_plan}")
+        return "\n".join(lines)
+
+
+class SuperOptimizer:
+    def __init__(self, ctx: OpContext, tolerance: float = 0.10,
+                 min_rel_accuracy: float = 0.90, micro_batch: int = 16,
+                 val_frames: int = 512):
+        self.ctx = ctx
+        self.micro_batch = micro_batch
+        self.val_frames = val_frames
+        self.semantic = SemanticOptimizer(tolerance=tolerance,
+                                          val_frames=val_frames)
+        self.logical = LogicalOptimizer(ctx)
+        self.physical = PhysicalOptimizer(ctx,
+                                          min_rel_accuracy=min_rel_accuracy)
+
+    # ------------------------------------------------------------------
+    def _run(self, plan: Plan, stream, n: int):
+        rt = StreamRuntime(plan, self.ctx, micro_batch=self.micro_batch)
+        return rt.run(stream, n)
+
+    def optimize(self, query, stream_factory,
+                 phases: Tuple[str, ...] = ("semantic", "logical",
+                                            "physical")
+                 ) -> Tuple[Plan, OptimizationReport]:
+        plan = query.naive_plan()
+        report_phases: List[Dict[str, Any]] = []
+        naive_desc = plan.describe()
+
+        if "semantic" in phases:
+            plan, rep = self.semantic.optimize(
+                plan, query, stream_factory, self._run)
+            report_phases.append(rep)
+
+        if "logical" in phases:
+            sample_stream = stream_factory(404)
+            frames, _ = sample_stream.batch(64)
+            plan, rep = self.logical.optimize(plan, query, frames)
+            report_phases.append(rep)
+
+        if "physical" in phases:
+            plan, rep = self.physical.optimize(
+                plan, query, stream_factory, self._run,
+                val_frames=self.val_frames)
+            report_phases.append(rep)
+
+        report = OptimizationReport(
+            query=query.qid, naive_plan=naive_desc,
+            phases=report_phases, final_plan=plan.describe())
+        return plan, report

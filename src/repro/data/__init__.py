@@ -1,0 +1,2 @@
+from repro.data.tollbooth import TollBoothStream, COLORS, BRANDS, PLATE_CHARS
+from repro.data.volleyball import VolleyballStream, ACTIONS

@@ -1,0 +1,1 @@
+from repro.distribution.pipeline import gpipe, PipelineConfig

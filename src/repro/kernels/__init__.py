@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel subpackage has:
+  kernel.py — ``pl.pallas_call`` with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (dispatches kernel on TPU, interpret-mode
+              kernel or the reference on CPU)
+  ref.py    — pure-jnp oracle used by the shape/dtype sweep tests
+
+Kernels:
+  flash_attention  — causal/local GQA attention with online softmax
+                     (the MLLM operator's prefill hot spot)
+  decode_attention — flash-decoding split-KV single-token attention
+  int8_matmul      — per-channel-scaled int8×int8→bf16 (physical-opt quantization)
+  ssd_scan         — Mamba2 SSD within-chunk compute
+  fused_preprocess — crop+downscale+normalize(+greyscale) in one HBM pass
+                     (the semantic-optimization data-reduction operators, fused)
+  frame_diff       — per-region frame differencing (Skip operator's condition)
+"""

@@ -1,0 +1,113 @@
+"""Flash-decoding Pallas kernel: single-token attention over a long KV cache.
+
+The KV sequence is split into ``nsplit`` chunks processed by parallel grid
+cells; each emits a partial (acc, m, l) triple.  The cheap logsumexp combine
+across splits happens in the ops.py wrapper (O(nsplit·G·D) — negligible).
+
+Layout: q (B, Hk, G, D), k/v (B, S, Hk, D), kv_len (B,) via scalar prefetch
+is avoided — kv_len enters as a regular (B, 1) int32 array indexed per block.
+
+Grid: (B, Hk, nsplit).  VMEM per program: one (bk, D) k/v panel + (G, D) q.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, acc_ref, m_ref, l_ref, *,
+                   scale: float, cap: Optional[float], window: Optional[int],
+                   bk: int, split: int):
+    isp = pl.program_id(2)
+    g, d = q_ref.shape[2], q_ref.shape[3]
+    kv_len = len_ref[0, 0]
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+    m = jnp.full((g, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((g, 1), jnp.float32)
+    acc = jnp.zeros((g, d), jnp.float32)
+
+    nk = split // bk
+
+    def body(i, carry):
+        m, l, acc = carry
+        k_start = isp * split + i * bk
+        k = k_ref[0, pl.dslice(i * bk, bk), 0, :]     # (bk, D)
+        v = v_ref[0, pl.dslice(i * bk, bk), 0, :]
+        s = jax.lax.dot_general(q, k.astype(jnp.float32),
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+        mask = kpos < kv_len
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > kv_len - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, -1, keepdims=True)
+        acc = acc * alpha + jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m, l, acc))
+    acc_ref[0, 0, 0] = acc
+    m_ref[0, 0, 0] = jnp.broadcast_to(m, m_ref.shape[3:])
+    l_ref[0, 0, 0] = jnp.broadcast_to(l, l_ref.shape[3:])
+
+
+def decode_attention_kernel(
+    q: jax.Array, k: jax.Array, v: jax.Array, kv_len: jax.Array, *,
+    cap: Optional[float] = None, window: Optional[int] = None,
+    nsplit: int = 8, bk: int = 256, interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """q (B,Hk,G,D), k/v (B,S,Hk,D), kv_len (B,1) int32.
+
+    Returns partials: acc (B,Hk,nsplit,G,D), m/l (B,Hk,nsplit,G,1→LANES).
+    """
+    b, hk, g, d = q.shape
+    s = k.shape[1]
+    while s % (nsplit * bk) != 0 and nsplit > 1:
+        nsplit //= 2
+    bk = min(bk, s // nsplit)
+    assert s % (nsplit * bk) == 0
+    split = s // nsplit
+    scale = 1.0 / np.sqrt(d)
+
+    kern = functools.partial(_decode_kernel, scale=scale, cap=cap,
+                             window=window, bk=bk, split=split)
+    lanes = 128
+    acc, m, l = pl.pallas_call(
+        kern,
+        grid=(b, hk, nsplit),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, split, 1, d), lambda b_, h_, i: (b_, i, h_, 0)),
+            pl.BlockSpec((1, split, 1, d), lambda b_, h_, i: (b_, i, h_, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, i: (b_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g, d), lambda b_, h_, i: (b_, h_, i, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g, lanes),
+                         lambda b_, h_, i: (b_, h_, i, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g, lanes),
+                         lambda b_, h_, i: (b_, h_, i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hk, nsplit, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hk, nsplit, g, lanes), jnp.float32),
+            jax.ShapeDtypeStruct((b, hk, nsplit, g, lanes), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, kv_len)
+    return acc, m, l

@@ -1,0 +1,47 @@
+"""Public decode-attention op: split-KV kernel + logsumexp combine."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def combine_splits(acc: jax.Array, m: jax.Array, l: jax.Array) -> jax.Array:
+    """Merge per-split partials. acc (B,Hk,ns,G,D), m/l (B,Hk,ns,G,LANES)."""
+    m = m[..., :1]                                    # (B,Hk,ns,G,1)
+    l = l[..., :1]
+    m_glob = jnp.max(m, axis=2, keepdims=True)
+    w = jnp.exp(m - m_glob)                           # (B,Hk,ns,G,1)
+    l_glob = jnp.sum(l * w, axis=2)                   # (B,Hk,G,1)
+    out = jnp.sum(acc * w, axis=2) / jnp.maximum(l_glob, 1e-30)
+    return out                                        # (B,Hk,G,D)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "window", "nsplit",
+                                             "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *, cap: Optional[float] = None,
+                     window: Optional[int] = None, nsplit: int = 8,
+                     interpret: bool = False) -> jax.Array:
+    """Model layout: q (B,1,H,D), k/v (B,S,Hk,D), kv_len (B,1) -> (B,1,H,D)."""
+    b, _, h, d = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q[:, 0].reshape(b, hk, g, d)
+    if _use_pallas() or interpret:
+        acc, m, l = decode_attention_kernel(
+            qg, k, v, kv_len.astype(jnp.int32), cap=cap, window=window,
+            nsplit=nsplit, interpret=interpret or not _use_pallas())
+        out = combine_splits(acc, m, l).astype(q.dtype)
+    else:
+        out = decode_attention_ref(qg, k, v, kv_len, cap=cap, window=window)
+    return out.reshape(b, 1, h, d)

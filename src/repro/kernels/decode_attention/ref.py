@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array, *,
+                         cap: Optional[float] = None,
+                         window: Optional[int] = None) -> jax.Array:
+    """q (B,Hk,G,D), k/v (B,S,Hk,D), kv_len (B,1) -> (B,Hk,G,D)."""
+    b, hk, g, d = q.shape
+    s = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    kpos = jnp.arange(s)
+    mask = kpos[None, :] < kv_len                       # (B, S)
+    if window is not None:
+        mask = jnp.logical_and(mask, kpos[None, :] > kv_len - 1 - window)
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,38 @@
+"""Public flash-attention op: model layout in, kernel dispatch by backend."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "cap", "window",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, cap: Optional[float] = None,
+                    window: Optional[int] = None,
+                    interpret: bool = False) -> jax.Array:
+    """Model layout: q (B, S, H, D); k, v (B, S, Hk, D) -> (B, S, H, D)."""
+    b, s, h, d = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.transpose(0, 2, 1, 3).reshape(b, hk, g, s, d)
+    kk = k.transpose(0, 2, 1, 3)
+    vv = v.transpose(0, 2, 1, 3)
+    if _use_pallas() or interpret:
+        out = flash_attention_kernel(qg, kk, vv, causal=causal, cap=cap,
+                                     window=window,
+                                     interpret=interpret or not _use_pallas())
+    else:
+        out = flash_attention_ref(qg, kk, vv, causal=causal, cap=cap,
+                                  window=window)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

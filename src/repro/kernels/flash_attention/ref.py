@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        cap: Optional[float] = None,
+                        window: Optional[int] = None) -> jax.Array:
+    """q (B, Hk, G, S, D); k, v (B, Hk, S, D) -> (B, Hk, G, S, D)."""
+    b, hk, g, s, d = q.shape
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Per-region frame differencing Pallas kernel (the Skip operator's signal).
+
+Computes mean |frame_t − frame_{t−1}| over a (RY × RX) grid of regions —
+the cheap "is anything happening here?" statistic the semantic optimizer's
+Skip(N, condition) operator evaluates before invoking the MLLM.
+
+Grid: (B, RY, RX); each program reduces one (C, rh, rw) region pair.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _diff_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[0].astype(jnp.float32)
+    b = b_ref[0].astype(jnp.float32)
+    o_ref[0, 0, 0] = jnp.mean(jnp.abs(a - b)) / 255.0
+
+
+def frame_diff_kernel(cur: jax.Array, prev: jax.Array, *, regions=(4, 4),
+                      interpret: bool = False) -> jax.Array:
+    """cur/prev (B, C, H, W) uint8 -> (B, RY, RX) f32 mean abs diff in [0,1]."""
+    b, c, h, w = cur.shape
+    ry, rx = regions
+    assert h % ry == 0 and w % rx == 0
+    rh, rw = h // ry, w // rx
+
+    return pl.pallas_call(
+        _diff_kernel,
+        grid=(b, ry, rx),
+        in_specs=[
+            pl.BlockSpec((1, c, rh, rw), lambda b_, i, j: (b_, 0, i, j)),
+            pl.BlockSpec((1, c, rh, rw), lambda b_, i, j: (b_, 0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1), lambda b_, i, j: (b_, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, ry, rx), jnp.float32),
+        interpret=interpret,
+    )(cur, prev)

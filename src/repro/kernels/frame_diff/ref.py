@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for frame differencing."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def frame_diff_ref(cur: jax.Array, prev: jax.Array, *,
+                   regions=(4, 4)) -> jax.Array:
+    b, c, h, w = cur.shape
+    ry, rx = regions
+    rh, rw = h // ry, w // rx
+    d = jnp.abs(cur.astype(jnp.float32) - prev.astype(jnp.float32)) / 255.0
+    d = d.reshape(b, c, ry, rh, rx, rw)
+    return d.mean(axis=(1, 3, 5))

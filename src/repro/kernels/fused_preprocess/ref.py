@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for fused preprocessing."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_preprocess_ref(
+    frames: jax.Array, *, crop: Tuple[int, int, int, int], factor: int = 1,
+    mean: Tuple[float, ...] = (0.5, 0.5, 0.5),
+    std: Tuple[float, ...] = (0.25, 0.25, 0.25), grey: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    b, c, h, w = frames.shape
+    y0, x0, ch, cw = crop
+    x = frames[:, :, y0:y0 + ch, x0:x0 + cw].astype(jnp.float32) / 255.0
+    x = x.reshape(b, c, ch // factor, factor, cw // factor, factor)
+    x = x.mean(axis=(3, 5))
+    mean_a = jnp.asarray(mean, jnp.float32).reshape(1, c, 1, 1)
+    std_a = jnp.asarray(std, jnp.float32).reshape(1, c, 1, 1)
+    x = (x - mean_a) / std_a
+    if grey:
+        wgt = jnp.asarray([0.299, 0.587, 0.114], jnp.float32).reshape(1, c, 1, 1)
+        x = jnp.sum(x * wgt, axis=1, keepdims=True)
+    return x.astype(out_dtype)

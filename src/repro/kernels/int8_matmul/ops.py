@@ -1,0 +1,35 @@
+"""Public int8 matmul op with quantize-on-the-fly convenience wrapper."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_matmul.kernel import int8_matmul_kernel
+from repro.kernels.int8_matmul.ref import (
+    int8_matmul_ref,
+    quantize_colwise,
+    quantize_rowwise,
+)
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_matmul(x_q: jax.Array, w_q: jax.Array, sx: jax.Array, sw: jax.Array,
+                interpret: bool = False) -> jax.Array:
+    if _use_pallas() or interpret:
+        return int8_matmul_kernel(x_q, w_q, sx, sw,
+                                  interpret=interpret or not _use_pallas())
+    return int8_matmul_ref(x_q, w_q, sx, sw)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_int8_dynamic(x: jax.Array, w_q: jax.Array, sw: jax.Array,
+                        interpret: bool = False) -> jax.Array:
+    """Dynamic activation quantization against pre-quantized weights."""
+    x_q, sx = quantize_rowwise(x)
+    return int8_matmul(x_q, w_q, sx, sw, interpret=interpret)

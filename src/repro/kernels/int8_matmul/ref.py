@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for int8 matmul + quantization helpers."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_rowwise(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization. x (M,K) -> (q (M,K) i8, s (M,1))."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_colwise(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-column int8 quantization. w (K,N) -> (q i8, s (1,N))."""
+    amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_matmul_ref(x: jax.Array, w: jax.Array, sx: jax.Array,
+                    sw: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+    return (acc.astype(jnp.float32) * sx * sw).astype(out_dtype)

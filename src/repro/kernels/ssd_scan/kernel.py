@@ -1,0 +1,88 @@
+"""Mamba2 SSD within-chunk Pallas kernel.
+
+Computes, per (batch·chunk, head) grid cell, the two MXU-heavy terms of the
+chunked SSD recurrence:
+  y_diag  = ((C Bᵀ) ∘ L) diag(dt) X        (Q,P)  — intra-chunk "attention"
+  s_local = Bᵀ diag(decay_end · dt) X      (N,P)  — end-of-chunk local state
+where L[i,j] = exp(cs_i − cs_j)·1[i≥j] and decay_end = exp(cs_Q − cs).
+
+The O(nc) inter-chunk recurrence and the rank-1 y_off correction stay in XLA
+(they are bandwidth-trivial).  cs (cumsum of dt·A) and dt are precomputed in
+ops.py and fed as (…,1,Q) rows so every block is a 2D lane-aligned tile.
+
+Grid: (B·NC, H).  VMEM per program (Q=256, P=128, N≤128):
+  x (Q,P) 128KiB + b,c (Q,N) ≤128KiB + L/cb (Q,Q) 256KiB f32 — well in budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, cs_ref, dt_ref, y_ref, s_ref):
+    q, p = x_ref.shape[2], x_ref.shape[3]
+    n = b_ref.shape[3]
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    bmat = b_ref[0, 0].astype(jnp.float32)       # (Q, N)
+    cmat = c_ref[0, 0].astype(jnp.float32)       # (Q, N)
+    cs = cs_ref[0, 0].astype(jnp.float32)        # (1, Q)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (1, Q)
+
+    seg = cs.reshape(q, 1) - cs.reshape(1, q)    # (Q, Q): cs_i - cs_j
+    causal = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmat = jnp.where(causal, jnp.exp(seg), 0.0)
+
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    w = cb * lmat * dt                            # dt broadcast over rows (j)
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    total = cs[0, q - 1]
+    decay_end = jnp.exp(total - cs) * dt          # (1, Q)
+    xw = x * decay_end.reshape(q, 1)              # (Q, P)
+    s_local = jax.lax.dot_general(bmat, xw, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (N,P)
+    s_ref[0, 0] = s_local.astype(s_ref.dtype)
+
+
+def ssd_scan_kernel(x: jax.Array, bmat: jax.Array, cmat: jax.Array,
+                    cs: jax.Array, dt: jax.Array, *,
+                    n_groups: int, interpret: bool = False):
+    """Within-chunk SSD terms.
+
+    x (BN, H, Q, P); bmat/cmat (BN, G, Q, N); cs/dt (BN, H, 1, Q).
+    Returns (y_diag (BN,H,Q,P) f32, s_local (BN,H,N,P) f32).
+    """
+    bn, h, q, p = x.shape
+    g = bmat.shape[1]
+    n = bmat.shape[3]
+    rep = h // g
+
+    y, s = pl.pallas_call(
+        _ssd_kernel,
+        grid=(bn, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j // rep, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j // rep, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bn, h, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((bn, h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, bmat, cmat, cs, dt)
+    return y, s

@@ -1,0 +1,81 @@
+"""Public SSD op: full chunked SSD using the kernel for within-chunk terms."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+        cmat: jax.Array, d_skip: jax.Array, *, chunk: int = 256,
+        interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full SSD: kernel within-chunk + XLA inter-chunk recurrence.
+
+    x (B,L,H,P); dt (B,L,H) fp32 (softplus'd); a (H,) fp32 (negative);
+    bmat/cmat (B,L,G,N); d_skip (H,).
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    b, l, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    nc = l // chunk
+    q = chunk
+
+    da = dt * a                                            # (B,L,H)
+    cs = jnp.cumsum(da.reshape(b, nc, q, h), axis=2)       # (B,NC,Q,H)
+    total = cs[:, :, -1, :]                                # (B,NC,H)
+
+    # kernel-layout reshapes
+    xk = x.reshape(b, nc, q, h, p).transpose(0, 1, 3, 2, 4).reshape(
+        b * nc, h, q, p)
+    bk = bmat.reshape(b, nc, q, g, n).transpose(0, 1, 3, 2, 4).reshape(
+        b * nc, g, q, n)
+    ck = cmat.reshape(b, nc, q, g, n).transpose(0, 1, 3, 2, 4).reshape(
+        b * nc, g, q, n)
+    csk = cs.transpose(0, 1, 3, 2).reshape(b * nc, h, 1, q)
+    dtk = dt.reshape(b, nc, q, h).transpose(0, 1, 3, 2).reshape(
+        b * nc, h, 1, q)
+
+    if _use_pallas() or interpret:
+        y_diag, s_local = ssd_scan_kernel(
+            xk, bk, ck, csk, dtk, n_groups=g,
+            interpret=interpret or not _use_pallas())
+    else:
+        y_diag, s_local = ssd_scan_ref(xk, bk, ck, csk, dtk, n_groups=g)
+
+    y_diag = y_diag.reshape(b, nc, h, q, p)
+    s_local = s_local.reshape(b, nc, h, n, p)
+
+    # ---- inter-chunk recurrence (XLA scan over nc) ----
+    def scan_fn(s_prev, inp):
+        tot_c, s_loc = inp
+        s_out = jnp.exp(tot_c)[:, :, None, None] * s_prev + s_loc
+        return s_out, s_prev
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    s_final, s_ins = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(total, 1, 0), jnp.moveaxis(s_local, 1, 0)))
+    s_in = jnp.moveaxis(s_ins, 0, 1)                        # (B,NC,H,N,P)
+
+    # ---- cross-chunk term ----
+    rep = h // g
+    ch_heads = jnp.repeat(cmat.reshape(b, nc, q, g, n), rep, axis=3)
+    c_decay = ch_heads.astype(jnp.float32) * jnp.exp(cs)[..., None]
+    y_off = jnp.einsum("bcqhn,bchnp->bchqp", c_decay, s_in)
+
+    y = y_diag + y_off
+    y = y.transpose(0, 1, 3, 2, 4).reshape(b, l, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(
+        jnp.float32)
+    final_state = jnp.swapaxes(s_final, -1, -2)             # (B,H,P,N)
+    return y.astype(x.dtype), final_state.astype(x.dtype)

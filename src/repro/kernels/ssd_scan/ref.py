@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the within-chunk SSD kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x: jax.Array, bmat: jax.Array, cmat: jax.Array,
+                 cs: jax.Array, dt: jax.Array, *, n_groups: int):
+    """Same contract as ssd_scan_kernel.
+
+    x (BN,H,Q,P); bmat/cmat (BN,G,Q,N); cs/dt (BN,H,1,Q).
+    Returns (y_diag (BN,H,Q,P) f32, s_local (BN,H,N,P) f32).
+    """
+    bn, h, q, p = x.shape
+    g = bmat.shape[1]
+    rep = h // g
+    bh = jnp.repeat(bmat, rep, axis=1).astype(jnp.float32)  # (BN,H,Q,N)
+    ch = jnp.repeat(cmat, rep, axis=1).astype(jnp.float32)
+    cs2 = cs[:, :, 0, :].astype(jnp.float32)                # (BN,H,Q)
+    dt2 = dt[:, :, 0, :].astype(jnp.float32)
+
+    seg = cs2[:, :, :, None] - cs2[:, :, None, :]           # (BN,H,i,j)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(causal[None, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bhin,bhjn->bhij", ch, bh)
+    w = cb * lmat * dt2[:, :, None, :]
+    y = jnp.einsum("bhij,bhjp->bhip", w, x.astype(jnp.float32))
+
+    total = cs2[:, :, -1]
+    decay_end = jnp.exp(total[:, :, None] - cs2) * dt2      # (BN,H,Q)
+    s_local = jnp.einsum("bhqn,bhq,bhqp->bhnp", bh, decay_end,
+                         x.astype(jnp.float32))
+    return y, s_local

@@ -1,0 +1,297 @@
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); they give this process 512 placeholder host devices so
+``make_production_mesh`` can build the real 16×16 and 2×16×16 meshes.
+
+For every applicable cell this script:
+  1. builds abstract inputs + shardings (launch/specs.py — no allocation),
+  2. jit-lowers the train/prefill/decode step under the production mesh,
+  3. compiles, prints memory_analysis() (proves it fits) and
+     cost_analysis() (FLOPs/bytes for the roofline),
+  4. parses the post-SPMD HLO for collective bytes,
+  5. writes reports/dryrun/<arch>__<cell>__<mesh>.json for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--quick]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import SHAPE_CELLS, applicable_cells
+from repro.common.sharding import mesh_scope, rules_scope
+from repro.configs import ASSIGNED, get_config
+from repro.launch.mesh import chips, make_production_mesh
+from repro.launch.specs import cell_spec, quantized_opt
+from repro.models import LM
+from repro.training.optimizer import OptimizerConfig, adamw_update
+from repro.training.trainer import make_train_step
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+               "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective in the post-SPMD HLO."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "= " not in line:
+            continue
+        kind = m.group(1)
+        shapes = SHAPE_RE.findall(line)
+        if not shapes:
+            continue
+        # first TYPE[dims] is the output; operands follow when printed.
+        # convention (documented in EXPERIMENTS.md): use operand shapes when
+        # present, else the output shape.
+        use = shapes[1:] if len(shapes) > 1 else shapes[:1]
+        nbytes = sum(_shape_bytes(t, d) for t, d in use)
+        out[kind] = out.get(kind, 0.0) + float(nbytes)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def build_step(cfg, cell_name: str, mesh, batch_override=None):
+    """Returns (step_fn, spec) for the cell."""
+    cell = SHAPE_CELLS[cell_name]
+    if cell.kind == "train" and os.environ.get("REPRO_FSDP_ONLY") == "1" \
+            and not cfg.has_moe:
+        # 1 seq/chip needs the full global batch in one microbatch
+        cfg = cfg.replace(grad_accum=1)
+        tp = 1  # no TP: no head padding
+    else:
+        tp = mesh.shape["model"]
+    lm = LM(cfg, tp=tp)
+    spec = cell_spec(cfg, cell_name, mesh, batch_override=batch_override)
+
+    if cell.kind == "train":
+        opt_cfg = OptimizerConfig(quantized_state=quantized_opt(cfg))
+        step = make_train_step(
+            lambda p, b: lm.loss(p, b, jnp.bfloat16), opt_cfg,
+            grad_accum=cfg.grad_accum, donate=False, jit=False)
+    elif cell.kind == "prefill":
+        def step(params, batch, cache):
+            return lm.prefill(params, batch, cache, dtype=jnp.bfloat16)
+    else:
+        def step(params, tokens, cache, cur_len):
+            return lm.decode(params, tokens, cache, cur_len,
+                             dtype=jnp.bfloat16)
+    return step, spec
+
+
+def _analyze(compiled) -> Dict[str, Any]:
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": collective_bytes(hlo),
+        "n_collectives": {
+            k: hlo.count(k + "(") + hlo.count(k + "-start(")
+            for k in ("all-reduce", "all-gather", "reduce-scatter",
+                      "all-to-all", "collective-permute")},
+    }
+
+
+def _compile_cell(cfg, cell_name, mesh, unroll: bool, batch_override=None):
+    """Lower + compile one cell; optionally fully unrolled scans."""
+    prev = os.environ.get("REPRO_UNROLL_SCANS")
+    if unroll:
+        os.environ["REPRO_UNROLL_SCANS"] = "1"
+    try:
+        with mesh_scope(mesh):
+            step, spec = build_step(cfg, cell_name, mesh,
+                                    batch_override=batch_override)
+            with rules_scope(**spec.rules):
+                jitted = jax.jit(step, in_shardings=spec.in_shardings,
+                                 donate_argnums=spec.donate)
+                lowered = jitted.lower(*spec.args)
+                compiled = lowered.compile()
+        return compiled, spec
+    finally:
+        if unroll:
+            if prev is None:
+                os.environ.pop("REPRO_UNROLL_SCANS", None)
+            else:
+                os.environ["REPRO_UNROLL_SCANS"] = prev
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool = False,
+             verbose: bool = True, save: bool = True,
+             costs: bool = True, tag: str = "") -> Dict[str, Any]:
+    """Compile the full scanned step (memory + sharding proof) and, on the
+    single-pod mesh, two reduced unrolled variants (1 and 2 periods) whose
+    difference gives the *exact* per-period FLOP/byte/collective counts —
+    XLA's cost_analysis counts while bodies once, so the scanned module
+    alone undercounts by the trip counts (verified; see EXPERIMENTS.md).
+        total = overhead + n_periods · (f₂ − f₁)   with overhead = f₁ − (f₂ − f₁)
+    """
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result: Dict[str, Any] = {
+        "arch": arch, "cell": cell_name, "mesh": mesh_name,
+        "chips": chips(mesh), "status": "ok",
+    }
+    t0 = time.time()
+    try:
+        compiled, spec = _compile_cell(cfg, cell_name, mesh, unroll=False)
+        t_full = time.time() - t0
+        mem = compiled.memory_analysis()
+        full = _analyze(compiled)
+
+        result.update({
+            "compile_s": round(t_full, 1),
+            "param_bytes_global": spec.param_bytes,
+            "memory_analysis": {
+                "argument_size_bytes": getattr(mem, "argument_size_in_bytes",
+                                               None),
+                "output_size_bytes": getattr(mem, "output_size_in_bytes",
+                                             None),
+                "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            },
+            "scanned_module": full,
+        })
+
+        if costs and not multi_pod:
+            # Period decomposition on reduced configs (exact for scan
+            # stacks).  For train cells the reduced compiles run ONE
+            # microbatch (grad_accum=1, batch/accum) — fwd/bwd FLOPs and
+            # collectives scale exactly linearly in the microbatch count;
+            # the once-per-step optimizer update (~30 FLOPs/param, <0.1% of
+            # any cell) is accordingly over-counted accum× — noted in
+            # EXPERIMENTS.md.
+            plen = len(cfg.block_pattern)
+            accum = cfg.grad_accum if SHAPE_CELLS[cell_name].kind == "train" \
+                else 1
+            if os.environ.get("REPRO_FSDP_ONLY") == "1" and not cfg.has_moe:
+                accum = 1  # FSDP-only mode runs one full-batch microbatch
+            b_over = (SHAPE_CELLS[cell_name].global_batch // accum
+                      if accum > 1 else None)
+            enc1, enc2 = {}, {}
+            if cfg.encoder_decoder:
+                enc1 = {"n_encoder_layers": plen}
+                enc2 = {"n_encoder_layers": 2 * plen}
+            cfg1 = cfg.replace(n_layers=plen, grad_accum=1, **enc1)
+            cfg2 = cfg.replace(n_layers=2 * plen, grad_accum=1, **enc2)
+            c1, _ = _compile_cell(cfg1, cell_name, mesh, unroll=True,
+                                  batch_override=b_over)
+            a1 = _analyze(c1)
+            c2, _ = _compile_cell(cfg2, cell_name, mesh, unroll=True,
+                                  batch_override=b_over)
+            a2 = _analyze(c2)
+            n_p = cfg.n_periods
+
+            def extrap(k1, k2):
+                core = k2 - k1
+                return (k1 + (n_p - 1) * core) * accum
+
+            coll_tot = extrap(a1["coll"]["total"], a2["coll"]["total"])
+            per_coll = {
+                k: extrap(a1["coll"].get(k, 0.0), a2["coll"].get(k, 0.0))
+                for k in set(a1["coll"]) | set(a2["coll"]) if k != "total"}
+            result.update({
+                "flops_per_partition": extrap(a1["flops"], a2["flops"]),
+                "bytes_accessed_per_partition": extrap(a1["bytes"],
+                                                       a2["bytes"]),
+                "collective_bytes_per_partition": {
+                    **per_coll, "total": coll_tot},
+                "decomposition": {"period_flops": a2["flops"] - a1["flops"],
+                                  "one_period": a1, "two_period": a2,
+                                  "n_periods": n_p, "accum_scale": accum},
+            })
+        if verbose:
+            ma = result["memory_analysis"]
+            arg_gb = (ma["argument_size_bytes"] or 0) / 2**30
+            tmp_gb = (ma["temp_size_bytes"] or 0) / 2**30
+            fl = result.get("flops_per_partition", full["flops"])
+            cl = result.get("collective_bytes_per_partition",
+                            full["coll"])["total"]
+            print(f"[OK] {arch:24s} {cell_name:12s} {mesh_name:10s} "
+                  f"args/dev={arg_gb:7.2f}GiB temp/dev={tmp_gb:7.2f}GiB "
+                  f"flops/part={fl:.3e} coll/part={cl/2**30:.3f}GiB "
+                  f"compile={t_full:.0f}s total={time.time()-t0:.0f}s",
+                  flush=True)
+    except Exception as e:  # noqa: BLE001 - report and continue
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[FAIL] {arch} {cell_name} {mesh_name}: "
+                  f"{result['error'][:200]}", flush=True)
+    if save:
+        out_dir = REPORT_DIR if not tag else REPORT_DIR + "_" + tag
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir,
+                            f"{arch}__{cell_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--tag", default="",
+                    help="save reports under reports/dryrun_<tag>/ "
+                         "(perf-iteration A/B runs)")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    if args.all:
+        for arch in ASSIGNED:
+            cfg = get_config(arch)
+            for cell in applicable_cells(cfg):
+                for mp in meshes:
+                    r = run_cell(arch, cell, multi_pod=mp, tag=args.tag)
+                    failures += r["status"] != "ok"
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        for mp in meshes:
+            r = run_cell(args.arch, args.shape, multi_pod=mp, tag=args.tag)
+            failures += r["status"] != "ok"
+    print(f"dry-run complete; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

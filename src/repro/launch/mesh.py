@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single-pod: (16, 16) = ("data", "model"); multi-pod:
+(2, 16, 16) = ("pod", "data", "model") — the pod axis maps to the DCN
+(inter-pod) network, data/model to ICI.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over available devices (tests / examples)."""
+    n = data * model
+    devs = np.asarray(jax.devices()[:n]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
+def chips(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,195 @@
+"""Roofline analysis over the dry-run reports.
+
+For each (arch × shape) cell on the single-pod mesh, computes the three
+roofline terms from the compiled-artifact measurements (launch/dryrun.py):
+
+  compute_s    = global_FLOPs      / (chips · 197e12  bf16 FLOP/s)
+  memory_s     = global_HBM_bytes  / (chips · 819e9   B/s)
+  collective_s = global_coll_bytes / (chips · 50e9    B/s ICI per link)
+
+All per-partition numbers from cost_analysis / the HLO parser are multiplied
+by `chips` to get globals (verified per-partition semantics; equivalently
+term = per_partition / per_chip_peak).  MODEL_FLOPS uses the standard
+6·N_active·D (train) / 2·N_active·D (prefill/decode) estimator, so
+MODEL_FLOPS / HLO_FLOPs exposes remat + masking + padding waste.
+
+Usage: python -m repro.launch.roofline [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from repro.common.config import SHAPE_CELLS
+from repro.configs import ASSIGNED, get_config
+
+PEAK_FLOPS = 197e12          # bf16 per chip (v5e-class)
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+
+def model_flops(arch: str, cell_name: str) -> float:
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[cell_name]
+    n_active = cfg.n_params_active()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch
+
+
+def memory_floor_bytes(arch: str, cell_name: str) -> float:
+    """Analytic minimum HBM traffic (global bytes) for one step.
+
+    cost_analysis' "bytes accessed" counts every unfused HLO operand — an
+    upper bound that a fused TPU program never pays.  The floor is what a
+    perfectly-fused program must still move:
+      train:   params (fp32 r+w) + moments r+w + grads (bf16 w+r) +
+               layer-boundary activations per microbatch (save+read)
+      prefill: params (bf16) + KV cache write + activations once
+      decode:  params (bf16) + full KV-cache read + O(1) writes
+    """
+    from repro.launch.specs import quantized_opt
+    from repro.models import LM
+    from repro.models.model import param_count_estimate
+
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[cell_name]
+    n = param_count_estimate(cfg)
+    d = cfg.d_model
+    if cell.kind == "train":
+        mstate = 2.0 if quantized_opt(cfg) else 8.0
+        pbytes = n * (4 + 4 + mstate * 2 + 2 + 2)  # p r/w, m+v r/w, g w+r
+        mb = cell.global_batch // cfg.grad_accum
+        act = (mb * cell.seq_len * d * 2) * cfg.n_layers * 2 * cfg.grad_accum
+        return pbytes + act
+    # serving cells: bf16 params
+    pbytes = 2 * n
+    if not cfg.has_attention:
+        kv = 0.0
+    else:
+        from repro.models.attention import head_layout
+
+        _, hkv_e, _ = head_layout(cfg.attention, 16)
+        n_attn = sum(1 for k in cfg.block_pattern
+                     if k.split("+")[0].startswith("attn")) * cfg.n_periods
+        kv = (cell.global_batch * cell.seq_len * hkv_e
+              * cfg.attention.head_dim * 2 * 2) * n_attn
+    if cell.kind == "prefill":
+        act = cell.global_batch * cell.seq_len * d * 2 * cfg.n_layers
+        return pbytes + kv + act
+    return pbytes + kv  # decode reads the cache once
+
+
+def analyze_report(rep: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if rep.get("status") != "ok" or "flops_per_partition" not in rep:
+        return None
+    chips = rep["chips"]
+    g_flops = rep["flops_per_partition"] * chips
+    g_bytes_upper = rep["bytes_accessed_per_partition"] * chips
+    g_coll = rep["collective_bytes_per_partition"]["total"] * chips
+    g_bytes_floor = memory_floor_bytes(rep["arch"], rep["cell"])
+
+    compute_s = g_flops / (chips * PEAK_FLOPS)
+    memory_up_s = g_bytes_upper / (chips * HBM_BW)
+    memory_s = g_bytes_floor / (chips * HBM_BW)
+    coll_s = g_coll / (chips * LINK_BW)
+    # dominance uses the *fused-program* memory floor; the unfused upper
+    # bound is reported alongside (see EXPERIMENTS.md conventions)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rep["arch"], rep["cell"])
+    bound_s = max(terms.values())
+    ideal_s = mf / (chips * PEAK_FLOPS)
+    return {
+        "arch": rep["arch"], "cell": rep["cell"], "mesh": rep["mesh"],
+        "chips": chips,
+        "global_flops": g_flops,
+        "global_bytes_floor": g_bytes_floor,
+        "global_bytes_unfused_upper": g_bytes_upper,
+        "global_collective_bytes": g_coll,
+        **{k: round(v, 6) for k, v in terms.items()},
+        "memory_unfused_upper_s": round(memory_up_s, 6),
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "useful_flops_ratio": round(mf / g_flops, 4) if g_flops else None,
+        "roofline_fraction": round(ideal_s / bound_s, 4) if bound_s else None,
+        "collective_breakdown": {
+            k: v * chips for k, v in
+            rep["collective_bytes_per_partition"].items() if k != "total"},
+        "hbm_per_chip_gib": round(
+            (rep["memory_analysis"]["argument_size_bytes"] or 0) / 2**30
+            + (rep["memory_analysis"]["temp_size_bytes"] or 0) / 2**30, 2),
+    }
+
+
+def load_all(report_dir: str = REPORT_DIR) -> List[Dict[str, Any]]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        with open(path) as f:
+            rep = json.load(f)
+        row = analyze_report(rep)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def what_would_help(row: Dict[str, Any]) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        top = max(row["collective_breakdown"],
+                  key=row["collective_breakdown"].get)
+        return (f"dominant collective is {top}: restructure sharding/schedule"
+                " (gather weights once per step, bf16 gathers, one-hot CE)")
+    if d == "compute":
+        ratio = row["useful_flops_ratio"] or 0
+        if ratio < 0.6:
+            return ("compute-bound with low useful-FLOP ratio: cut remat "
+                    "recompute + masked-attention waste (flash/ring)")
+        return "compute-bound near roofline: increase arithmetic intensity"
+    return "memory-bound: fuse elementwise chains, widen tiles, bf16/int8"
+
+
+def table(rows: List[Dict[str, Any]]) -> str:
+    hdr = (f"{'arch':24s} {'cell':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dom':>10s} {'useful':>7s} {'roofline':>8s} "
+           f"{'HBM/chip':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['cell']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant']:>10s} "
+            f"{(r['useful_flops_ratio'] or 0):7.3f} "
+            f"{(r['roofline_fraction'] or 0):8.3f} "
+            f"{r['hbm_per_chip_gib']:8.2f}G")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = load_all()
+    print(table(rows))
+    print()
+    for r in rows:
+        print(f"{r['arch']:24s} {r['cell']:12s} -> {what_would_help(r)}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

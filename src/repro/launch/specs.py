@@ -1,0 +1,215 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch × shape) cell.
+
+No device allocation ever happens here — everything is abstract (the same
+pattern the dry-run brief describes).  ``cell_spec`` returns:
+
+  step_kind      "train" | "prefill" | "decode"
+  args           tuple of abstract args for the step function
+  in_shardings   matching tree of NamedShardings
+  out_shardings  None (inferred) — constraints inside the model pin layouts
+  rules          logical-rule overrides active for this cell
+  donate         indices of donated args
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.common.config import ArchConfig, ShapeCell, SHAPE_CELLS
+from repro.common.sharding import (
+    logical_to_mesh,
+    named_sharding,
+    param_sharding_tree,
+    rules_scope,
+)
+from repro.models import LM, abstract, axes_tree
+from repro.models.model import is_shape_leaf
+from repro.training.optimizer import OptimizerConfig, adamw_init
+
+# multimodal stub sizes
+N_PATCHES = 1024        # pixtral patch embeddings per sample
+T_SRC_CAP = 4096        # seamless encoder frames cap
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    cell: str
+    step_kind: str
+    args: Tuple
+    in_shardings: Tuple
+    rules: Dict[str, Any]
+    donate: Tuple[int, ...]
+    param_bytes: int
+    notes: str = ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_inputs(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh,
+                 dtype=jnp.bfloat16) -> Tuple[Dict, Dict]:
+    """Token/extra inputs for a full-sequence step (train or prefill)."""
+    b, s = cell.global_batch, cell.seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    shard = {"tokens": named_sharding(("batch", "seq"), mesh)}
+    if cell.kind == "train":
+        batch["labels"] = _sds((b, s), jnp.int32)
+        shard["labels"] = named_sharding(("batch", "seq"), mesh)
+    if cfg.frontend == "patch":
+        batch["patch_embeds"] = _sds((b, N_PATCHES, cfg.d_model), dtype)
+        batch["patch_pos"] = _sds((b, N_PATCHES), jnp.int32)
+        shard["patch_embeds"] = named_sharding(("batch", None, "embed"), mesh)
+        shard["patch_pos"] = named_sharding(("batch", None), mesh)
+    if cfg.frontend == "audio":
+        t_src = min(s, T_SRC_CAP)
+        batch["frames"] = _sds((b, t_src, cfg.d_model), dtype)
+        shard["frames"] = named_sharding(("batch", None, "embed"), mesh)
+    return batch, shard
+
+
+def cache_abstract(lm: LM, batch: int, s_max: int, mesh: Mesh,
+                   t_src: int = 0, dtype=jnp.bfloat16):
+    shapes = lm.cache_shapes(batch, s_max, t_src)
+
+    def mk(leaf):
+        shape, axes = leaf
+        return _sds(shape, dtype)
+
+    def mk_shard(leaf):
+        shape, axes = leaf
+        return named_sharding(axes, mesh)
+
+    cache = jax.tree_util.tree_map(mk, shapes, is_leaf=is_shape_leaf)
+    shard = jax.tree_util.tree_map(mk_shard, shapes, is_leaf=is_shape_leaf)
+    return cache, shard
+
+
+def quantized_opt(cfg: ArchConfig) -> bool:
+    """int8 Adam moments for archs whose fp32 state wouldn't fit one pod."""
+    return cfg.n_params_dense_equiv() > 3e10
+
+
+def cell_rules(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Logical-rule overrides for a cell."""
+    rules: Dict[str, Any] = {}
+    if cell.is_decode and cell.global_batch == 1:
+        # long-context decode: batch unshardable; shard the KV sequence
+        # (sequence parallelism over "data")
+        rules.update({"batch": None, "kv_seq": ("data",)})
+    if cell.is_decode and os.environ.get("REPRO_DECODE_2DTP") == "1" \
+            and cfg.d_ff % 256 == 0:
+        # §Perf: weight-stationary decode — dense weights fully sharded
+        # over BOTH mesh axes (d_ff 2D-TP); no ZeRO gathers per token, the
+        # FFN output psum is O(d_model) per token.  Experts keep their
+        # expert_fsdp rows (handled by the MoE partial-sum path).
+        rules.update({"fsdp": None, "mlp": ("model", "data")})
+    if cell.kind == "train" and os.environ.get("REPRO_FSDP_ONLY") == "1" \
+            and not cfg.has_moe:
+        # §Perf: small dense archs don't want TP at all — batch shards over
+        # every axis (1 seq/chip), weights ZeRO-3 over both axes; the TP
+        # activation all-reduces disappear and the only collectives left
+        # are the (tiny per-partition) weight gathers + grad scatters.
+        rules.update({
+            "batch": ("pod", "data", "model"),
+            "fsdp": ("data", "model"),
+            "mlp": None, "heads": None, "kv_heads": None, "vocab": None,
+            "ssm_heads": None,
+        })
+    return rules
+
+
+def cell_spec(cfg: ArchConfig, cell_name: str, mesh: Mesh,
+              opt_cfg: Optional[OptimizerConfig] = None,
+              batch_override: Optional[int] = None) -> CellSpec:
+    cell = SHAPE_CELLS[cell_name]
+    if batch_override is not None:
+        cell = ShapeCell(cell.name, cell.seq_len, batch_override, cell.kind)
+    tp = mesh.shape["model"]
+    if cell.kind == "train" and os.environ.get("REPRO_FSDP_ONLY") == "1" \
+            and not cfg.has_moe:
+        tp = 1  # no TP: no head padding/replication needed
+    lm = LM(cfg, tp=tp)
+    spec = lm.spec()
+    rules = cell_rules(cfg, cell)
+
+    with rules_scope(**rules):
+        p_axes = axes_tree(spec)
+        if cell.kind == "train":
+            params = abstract(spec, jnp.float32)
+            p_shard = param_sharding_tree(p_axes, mesh)
+            opt_cfg = opt_cfg or OptimizerConfig(
+                quantized_state=quantized_opt(cfg))
+            opt_state = jax.eval_shape(
+                lambda p: adamw_init(p, opt_cfg), params)
+            opt_shard = _opt_sharding(opt_state, p_shard, mesh)
+            batch, b_shard = batch_inputs(cfg, cell, mesh)
+            args = (params, opt_state, batch)
+            shardings = (p_shard, opt_shard, b_shard)
+            donate = (0, 1)
+            pb = _tree_bytes(params) + _tree_bytes(opt_state)
+        elif cell.kind == "prefill":
+            params = abstract(spec, jnp.bfloat16)
+            p_shard = param_sharding_tree(p_axes, mesh)
+            batch, b_shard = batch_inputs(cfg, cell, mesh)
+            t_src = min(cell.seq_len, T_SRC_CAP) if cfg.encoder_decoder else 0
+            cache, c_shard = cache_abstract(lm, cell.global_batch,
+                                            cell.seq_len, mesh, t_src)
+            args = (params, batch, cache)
+            shardings = (p_shard, b_shard, c_shard)
+            donate = (2,)
+            pb = _tree_bytes(params)
+        else:  # decode
+            params = abstract(spec, jnp.bfloat16)
+            p_shard = param_sharding_tree(p_axes, mesh)
+            tokens = _sds((cell.global_batch, 1), jnp.int32)
+            tok_shard = named_sharding(("batch", None), mesh)
+            t_src = T_SRC_CAP if cfg.encoder_decoder else 0
+            cache, c_shard = cache_abstract(lm, cell.global_batch,
+                                            cell.seq_len, mesh, t_src)
+            cur = _sds((), jnp.int32)
+            cur_shard = NamedSharding(mesh, logical_to_mesh((), mesh))
+            args = (params, tokens, cache, cur)
+            shardings = (p_shard, tok_shard, c_shard, cur_shard)
+            donate = (2,)
+            pb = _tree_bytes(params)
+
+    return CellSpec(arch=cfg.name, cell=cell_name, step_kind=cell.kind,
+                    args=args, in_shardings=shardings, rules=rules,
+                    donate=donate, param_bytes=pb)
+
+
+def _opt_sharding(opt_state, p_shard, mesh):
+    """Moments shard like their params; scale rows drop the last axis."""
+    rep = NamedSharding(mesh, logical_to_mesh((), mesh))
+
+    def moment_shard(psh, mom):
+        out = {}
+        for k, v in mom.items():
+            if k in ("m", "v", "m_q", "v_q"):
+                out[k] = psh
+            else:  # m_s / v_s: param shape with last dim 1
+                spec = psh.spec
+                out[k] = NamedSharding(mesh, type(spec)(
+                    *(list(spec[:v.ndim - 1]) + [None]))) \
+                    if len(spec) >= v.ndim else psh
+        return out
+
+    moments = jax.tree_util.tree_map(
+        moment_shard, p_shard, opt_state["moments"],
+        is_leaf=lambda x: isinstance(x, NamedSharding))
+    return {"moments": moments, "step": rep}
+
+
+def _tree_bytes(tree) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total

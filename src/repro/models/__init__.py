@@ -1,0 +1,8 @@
+from repro.models.model import LM, param_count_estimate, is_shape_leaf
+from repro.models.param import (
+    ParamSpec,
+    abstract,
+    axes_tree,
+    count_params,
+    materialize,
+)

@@ -1,0 +1,373 @@
+"""GQA attention: TP-aware head layout, chunked prefill, cached decode.
+
+TP head layout
+--------------
+The production mesh has a 16-way "model" axis.  Architectures whose head
+counts don't divide it get:
+  * q heads zero-padded to a multiple of tp (padded heads are masked out of
+    the output so they are exact no-ops, including in gradients);
+  * kv heads *replicated at compute time* (params keep the true GQA head
+    count; the replicated copies are gathered with a static index map, so
+    gradients sum back into the true heads).  This is standard TP serving
+    practice; the extra KV-cache memory is recorded in the roofline notes.
+
+Prefill attention is computed in q-blocks under ``lax.scan`` with
+``jax.checkpoint`` per block, so peak memory is O(S·q_block) instead of
+O(S²).  The causal path masks a full-K block panel (up to 2× attention-FLOP
+waste vs. an ideal flash schedule — the Pallas flash kernel and the ring
+variant remove this on the TPU target; see EXPERIMENTS.md §Perf).
+Local (sliding-window) attention slices an exact static window, no waste.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import AttentionConfig
+from repro.common.sharding import shard_constraint
+from repro.common.utils import pad_to_multiple, scan_unroll
+from repro.models.layers import apply_rope, rms_norm_simple, softcap
+from repro.models.param import ParamSpec
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Head layout
+# --------------------------------------------------------------------------
+
+def head_layout(att: AttentionConfig, tp: int) -> Tuple[int, int, np.ndarray]:
+    """Returns (padded q heads, effective kv heads, kv replication index map)."""
+    hq_p = pad_to_multiple(att.n_heads, tp)
+    if att.n_kv_heads % tp == 0 and hq_p % att.n_kv_heads == 0:
+        hkv_e = att.n_kv_heads
+    else:
+        # smallest multiple of tp that divides hq_p and replicates kv evenly
+        hkv_e = hq_p
+        m = tp
+        while m <= hq_p:
+            if hq_p % m == 0 and m % att.n_kv_heads == 0 and m >= att.n_kv_heads:
+                hkv_e = m
+                break
+            m += tp
+    kv_map = (np.arange(hkv_e) * att.n_kv_heads) // hkv_e
+    return hq_p, hkv_e, kv_map
+
+
+def attention_spec(d_model: int, att: AttentionConfig, tp: int,
+                   cross: bool = False) -> Dict[str, ParamSpec]:
+    hq_p, _, _ = head_layout(att, tp)
+    d = att.head_dim
+    spec: Dict[str, ParamSpec] = {
+        "wq": ParamSpec((d_model, hq_p, d), ("fsdp", "heads", "head_dim")),
+        "wk": ParamSpec((d_model, att.n_kv_heads, d), ("fsdp", None, "head_dim")),
+        "wv": ParamSpec((d_model, att.n_kv_heads, d), ("fsdp", None, "head_dim")),
+        "wo": ParamSpec((hq_p, d, d_model), ("heads", "head_dim", "fsdp")),
+    }
+    if att.qk_norm and not cross:
+        spec["q_norm"] = ParamSpec((d,), ("head_dim",), "ones")
+        spec["k_norm"] = ParamSpec((d,), ("head_dim",), "ones")
+    return spec
+
+
+def _project_qkv(params, att: AttentionConfig, tp: int, xq: jax.Array,
+                 xkv: jax.Array):
+    """Project and lay out heads. xq (B,Sq,d), xkv (B,Skv,d)."""
+    dtype = xq.dtype
+    hq_p, hkv_e, kv_map = head_layout(att, tp)
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"].astype(dtype))
+    if att.qk_norm and "q_norm" in params:
+        q = rms_norm_simple(q, params["q_norm"])
+        k = rms_norm_simple(k, params["k_norm"])
+    # replicate kv heads to the TP-effective count (static gather)
+    if hkv_e != att.n_kv_heads:
+        k = jnp.take(k, jnp.asarray(kv_map), axis=2)
+        v = jnp.take(v, jnp.asarray(kv_map), axis=2)
+    q = shard_constraint(q, "batch", "seq", "heads", "head_dim")
+    k = shard_constraint(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = shard_constraint(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _head_mask(att: AttentionConfig, tp: int, dtype) -> Optional[jax.Array]:
+    hq_p, _, _ = head_layout(att, tp)
+    if hq_p == att.n_heads:
+        return None
+    mask = np.zeros((hq_p,), dtype=np.float32)
+    mask[: att.n_heads] = 1.0
+    return jnp.asarray(mask, dtype)
+
+
+def _out_proj(params, att: AttentionConfig, tp: int, out: jax.Array) -> jax.Array:
+    dtype = out.dtype
+    hm = _head_mask(att, tp, dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return shard_constraint(y, "batch", "seq", "embed")
+
+
+# --------------------------------------------------------------------------
+# Core attention math
+# --------------------------------------------------------------------------
+
+def _gqa_logits(q, k, scale, cap):
+    """q (B,Sq,H,D), k (B,Sk,Hk,D) -> logits (B,H,Sq,Sk) fp32, GQA-grouped."""
+    b, sq, h, d = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, sq, hk, g, d)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    return logits  # (B, Hk, G, Sq, Sk)
+
+
+def _gqa_out(probs, v, out_dtype):
+    """probs (B,Hk,G,Sq,Sk) fp32, v (B,Sk,Hk,D) -> (B,Sq,H,D)."""
+    b, hk, g, sq, sk = probs.shape
+    d = v.shape[-1]
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hk * g, d).astype(out_dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, cap: Optional[float] = None,
+                   q_offset: int = 0, kv_len: Optional[jax.Array] = None):
+    """Direct (materialized-logits) attention. Use for small S / decode."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = _gqa_logits(q, k, scale, cap)
+    sq, sk = logits.shape[-2], logits.shape[-1]
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return _gqa_out(probs, v, q.dtype)
+
+
+def _block_attend(qb, k, v, qpos, kpos, cap, out_dtype):
+    scale = 1.0 / np.sqrt(qb.shape[-1])
+    logits = _gqa_logits(qb, k, scale, cap)  # (B,Hk,G,Bq,Sk)
+    mask = kpos[None, :] <= qpos[:, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return _gqa_out(probs, v, out_dtype)
+
+
+def chunked_causal_attention(q, k, v, *, cap: Optional[float] = None,
+                             q_block: int = 1024):
+    """Causal attention, scanned over q blocks. O(S·q_block) live memory."""
+    b, s, h, d = q.shape
+    if s <= q_block or s % q_block != 0:
+        return full_attention(q, k, v, causal=True, cap=cap)
+    nq = s // q_block
+    qs = q.reshape(b, nq, q_block, h, d)
+    kpos = jnp.arange(s)
+
+    @jax.checkpoint
+    def step(_, inp):
+        i, qb = inp
+        qpos = i * q_block + jnp.arange(q_block)
+        ob = _block_attend(qb, k, v, qpos, kpos, cap, q.dtype)
+        return None, ob
+
+    _, out = jax.lax.scan(step, None,
+                          (jnp.arange(nq), jnp.swapaxes(qs, 0, 1)),
+                          unroll=scan_unroll(nq))
+    out = jnp.swapaxes(out, 0, 1).reshape(b, s, h, d)
+    return out
+
+
+def chunked_bidir_attention(q, k, v, *, cap: Optional[float] = None,
+                            q_block: int = 1024):
+    """Full bidirectional attention (encoders / cross-attn), q-block scanned."""
+    b, s, h, d = q.shape
+    if s <= q_block or s % q_block != 0:
+        scale = 1.0 / np.sqrt(d)
+        logits = _gqa_logits(q, k, scale, cap)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return _gqa_out(probs, v, q.dtype)
+    nq = s // q_block
+    qs = jnp.swapaxes(q.reshape(b, nq, q_block, h, d), 0, 1)
+
+    @jax.checkpoint
+    def step(_, qb):
+        scale = 1.0 / np.sqrt(d)
+        logits = _gqa_logits(qb, k, scale, cap)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return None, _gqa_out(probs, v, q.dtype)
+
+    _, out = jax.lax.scan(step, None, qs, unroll=scan_unroll(nq))
+    return jnp.swapaxes(out, 0, 1).reshape(b, s, h, d)
+
+
+def _windowed_full_attention(q, k, v, *, window: int,
+                             cap: Optional[float] = None):
+    """Direct attention with causal + sliding-window mask (small-S path)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = _gqa_logits(q, k, scale, cap)
+    sq, sk = logits.shape[-2], logits.shape[-1]
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = (kpos[None, :] <= qpos[:, None]) & (
+        kpos[None, :] > qpos[:, None] - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return _gqa_out(probs, v, q.dtype)
+
+
+def local_causal_attention(q, k, v, *, window: int, cap: Optional[float] = None,
+                           q_block: Optional[int] = None):
+    """Sliding-window causal attention with an exact static K panel per block.
+
+    q block i attends K in [i*Bq - window, i*Bq + Bq) — a static-size slice,
+    so there is no masked-FLOP waste beyond the window boundary itself.
+    """
+    b, s, h, d = q.shape
+    bq = q_block or min(1024, s)
+    if s <= window or s <= bq or s % bq != 0:
+        return _windowed_full_attention(q, k, v, window=window, cap=cap)
+    nq = s // bq
+    panel = window + bq  # static K panel size
+    qs = jnp.swapaxes(q.reshape(b, nq, bq, h, d), 0, 1)
+
+    @jax.checkpoint
+    def step(_, inp):
+        i, qb = inp
+        start = jnp.clip(i * bq - window, 0, s - panel)
+        kp = jax.lax.dynamic_slice_in_dim(k, start, panel, axis=1)
+        vp = jax.lax.dynamic_slice_in_dim(v, start, panel, axis=1)
+        qpos = i * bq + jnp.arange(bq)
+        kpos = start + jnp.arange(panel)
+        scale = 1.0 / np.sqrt(d)
+        logits = _gqa_logits(qb, kp, scale, cap)
+        mask = (kpos[None, :] <= qpos[:, None]) & (
+            kpos[None, :] > qpos[:, None] - window
+        )
+        logits = jnp.where(mask, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return None, _gqa_out(probs, vp, q.dtype)
+
+    _, out = jax.lax.scan(step, None, (jnp.arange(nq), qs),
+                          unroll=scan_unroll(nq))
+    return jnp.swapaxes(out, 0, 1).reshape(b, s, h, d)
+
+
+# --------------------------------------------------------------------------
+# Public block-level entry points
+# --------------------------------------------------------------------------
+
+def attend_prefill(params, att: AttentionConfig, tp: int, x: jax.Array,
+                   positions: jax.Array, *, local: bool = False,
+                   q_block: int = 1024,
+                   return_kv: bool = False):
+    """Self-attention over a full sequence (train / prefill)."""
+    q, k, v = _project_qkv(params, att, tp, x, x)
+    q = apply_rope(q, positions, att.rotary_pct, att.rope_theta)
+    k = apply_rope(k, positions, att.rotary_pct, att.rope_theta)
+    if local and att.window is not None and x.shape[1] > att.window:
+        out = local_causal_attention(q, k, v, window=att.window,
+                                     cap=att.softcap, q_block=q_block)
+    else:
+        out = chunked_causal_attention(q, k, v, cap=att.softcap,
+                                       q_block=q_block)
+    y = _out_proj(params, att, tp, out)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attend_encoder(params, att: AttentionConfig, tp: int, x: jax.Array,
+                   positions: jax.Array, q_block: int = 1024) -> jax.Array:
+    """Bidirectional self-attention (encoder)."""
+    q, k, v = _project_qkv(params, att, tp, x, x)
+    q = apply_rope(q, positions, att.rotary_pct, att.rope_theta)
+    k = apply_rope(k, positions, att.rotary_pct, att.rope_theta)
+    out = chunked_bidir_attention(q, k, v, cap=att.softcap, q_block=q_block)
+    return _out_proj(params, att, tp, out)
+
+
+def attend_cross(params, att: AttentionConfig, tp: int, x: jax.Array,
+                 kv_cache: Tuple[jax.Array, jax.Array],
+                 q_block: int = 1024) -> jax.Array:
+    """Cross-attention against precomputed encoder K/V."""
+    dtype = x.dtype
+    hq_p, hkv_e, kv_map = head_layout(att, tp)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    q = shard_constraint(q, "batch", "seq", "heads", "head_dim")
+    k, v = kv_cache
+    out = chunked_bidir_attention(q, k, v, cap=att.softcap, q_block=q_block)
+    return _out_proj(params, att, tp, out)
+
+
+def cross_kv(params, att: AttentionConfig, tp: int,
+             enc_out: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Project encoder output into replicated-head cross K/V (cached once)."""
+    dtype = enc_out.dtype
+    _, hkv_e, kv_map = head_layout(att, tp)
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(dtype))
+    if hkv_e != att.n_kv_heads:
+        k = jnp.take(k, jnp.asarray(kv_map), axis=2)
+        v = jnp.take(v, jnp.asarray(kv_map), axis=2)
+    k = shard_constraint(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = shard_constraint(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    return k, v
+
+
+def attend_decode(params, att: AttentionConfig, tp: int, x: jax.Array,
+                  cache_k: jax.Array, cache_v: jax.Array,
+                  cur_len: jax.Array, *, local: bool = False):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, d).  cache_k/v: (B, S_max, Hkv_e, D).  cur_len: scalar int32
+    (uniform lengths — dry-run/serve_step) or (B,) int32 (per-slot lengths —
+    continuous-batching engine).  The new token is written at cur_len.
+    Returns (y, new_cache_k, new_cache_v).
+    """
+    b, _, _ = x.shape
+    q, k_new, v_new = _project_qkv(params, att, tp, x, x)
+    lens = jnp.broadcast_to(cur_len, (b,)) if cur_len.ndim == 0 else cur_len
+    q = apply_rope(q, lens[:, None], att.rotary_pct, att.rope_theta)
+    k_new = apply_rope(k_new, lens[:, None], att.rotary_pct, att.rope_theta)
+    if cur_len.ndim == 0:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new.astype(cache_k.dtype), cur_len, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new.astype(cache_v.dtype), cur_len, axis=1)
+    else:
+        bidx = jnp.arange(b)
+        cache_k = cache_k.at[bidx, lens].set(k_new[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, lens].set(v_new[:, 0].astype(cache_v.dtype))
+    cache_k = shard_constraint(cache_k, "batch", "kv_seq", "kv_heads", "head_dim")
+    cache_v = shard_constraint(cache_v, "batch", "kv_seq", "kv_heads", "head_dim")
+    kv_len = lens + 1  # (B,)
+    window = att.window if (local and att.window is not None) else None
+    out = _decode_attend(q, cache_k, cache_v, kv_len, att.softcap,
+                         window=window)
+    y = _out_proj(params, att, tp, out)
+    return y, cache_k, cache_v
+
+
+def _decode_attend(q, k, v, kv_len, cap, window: Optional[int] = None):
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = _gqa_logits(q, k, scale, cap)  # (B,Hk,G,1,S)
+    s = k.shape[1]
+    kpos = jnp.arange(s)
+    mask = kpos[None, :] < kv_len[:, None]            # (B, S)
+    if window is not None:
+        mask &= kpos[None, :] > (kv_len[:, None] - 1 - window)
+    logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return _gqa_out(probs, v, q.dtype)

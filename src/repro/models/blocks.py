@@ -1,0 +1,242 @@
+"""Block assembly and scan-over-periods stacks.
+
+A *period* is one repetition of ``cfg.block_pattern`` (e.g. gemma2's
+(local, global) pair, jamba's 8-layer mamba/attn/MoE interleave).  Parameters
+for all periods are stacked on a leading "layers" axis and the stack is
+executed with ``lax.scan`` so compile time and HLO size are O(one period).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ArchConfig, BlockSpecEntry
+from repro.common.utils import scan_unroll
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_mlp, apply_norm, mlp_spec, norm_spec
+from repro.models.param import ParamSpec, stack as stack_specs
+
+
+# --------------------------------------------------------------------------
+# Single block
+# --------------------------------------------------------------------------
+
+def block_spec(cfg: ArchConfig, kind: str, tp: int,
+               cross_attention: bool = False) -> Dict[str, Any]:
+    ent = BlockSpecEntry.parse(kind)
+    d = cfg.d_model
+    spec: Dict[str, Any] = {"pre_norm": norm_spec(d, cfg.norm)}
+    if ent.mixer == "mamba":
+        spec["mixer"] = ssm_mod.mamba_spec(d, cfg.ssm, tp)
+    else:
+        spec["mixer"] = attn.attention_spec(d, cfg.attention, tp)
+    if cfg.post_block_norm:
+        spec["post_mixer_norm"] = norm_spec(d, cfg.norm)
+    if cross_attention:
+        spec["cross_norm"] = norm_spec(d, cfg.norm)
+        spec["cross"] = attn.attention_spec(d, cfg.attention, tp, cross=True)
+    if ent.mlp != "none":
+        spec["pre_mlp_norm"] = norm_spec(d, cfg.norm)
+        if ent.mlp == "moe":
+            spec["mlp"] = moe_mod.moe_spec(d, cfg.moe)
+        else:
+            spec["mlp"] = mlp_spec(d, cfg.d_ff, cfg.mlp_gated)
+        if cfg.post_block_norm:
+            spec["post_mlp_norm"] = norm_spec(d, cfg.norm)
+    return spec
+
+
+def block_cache_shapes(cfg: ArchConfig, kind: str, tp: int, batch: int,
+                       s_max: int) -> Dict[str, Tuple]:
+    """(shape, logical axes) per cache leaf for one block."""
+    ent = BlockSpecEntry.parse(kind)
+    if ent.mixer == "mamba":
+        return ssm_mod.mamba_decode_cache_spec(cfg.d_model, cfg.ssm, tp, batch)
+    _, hkv_e, _ = attn.head_layout(cfg.attention, tp)
+    d = cfg.attention.head_dim
+    return {
+        "k": ((batch, s_max, hkv_e, d), ("batch", "kv_seq", "kv_heads", "head_dim")),
+        "v": ((batch, s_max, hkv_e, d), ("batch", "kv_seq", "kv_heads", "head_dim")),
+    }
+
+
+def apply_block(cfg: ArchConfig, kind: str, tp: int, params: Dict[str, Any],
+                x: jax.Array, *, mode: str, positions: jax.Array,
+                cache: Optional[Dict[str, jax.Array]] = None,
+                cur_len: Optional[jax.Array] = None,
+                cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                q_block: int = 1024):
+    """Apply one block.
+
+    mode: "causal" (train/prefill, no cache out) | "prefill_cache"
+          | "encode" (bidirectional) | "decode".
+    Returns (x, new_cache_or_None, moe_aux).
+    """
+    ent = BlockSpecEntry.parse(kind)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, jax.Array] = {}
+
+    h = apply_norm(params["pre_norm"], x, cfg.norm)
+    if ent.mixer == "mamba":
+        if mode == "decode":
+            y, mcache = ssm_mod.mamba_decode(params["mixer"], cfg.ssm, tp, h,
+                                             cache)
+            new_cache = mcache
+        elif mode == "prefill_cache":
+            y, mcache = ssm_mod.mamba_prefill_with_cache(params["mixer"],
+                                                         cfg.ssm, tp, h)
+            new_cache = mcache
+        else:
+            y = ssm_mod.mamba_prefill(params["mixer"], cfg.ssm, tp, h)
+    else:
+        local = ent.mixer == "attn_local"
+        if mode == "decode":
+            y, ck, cv = attn.attend_decode(params["mixer"], cfg.attention, tp,
+                                           h, cache["k"], cache["v"], cur_len,
+                                           local=local)
+            new_cache = {"k": ck, "v": cv}
+        elif mode == "encode":
+            y = attn.attend_encoder(params["mixer"], cfg.attention, tp, h,
+                                    positions, q_block=q_block)
+        elif mode == "prefill_cache":
+            y, (k, v) = attn.attend_prefill(params["mixer"], cfg.attention,
+                                            tp, h, positions, local=local,
+                                            q_block=q_block, return_kv=True)
+            # place prefix into a fresh max-length cache
+            s_max = cache["k"].shape[1]
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            new_cache = {"k": ck, "v": cv}
+        else:
+            y = attn.attend_prefill(params["mixer"], cfg.attention, tp, h,
+                                    positions, local=local, q_block=q_block)
+    if cfg.post_block_norm:
+        y = apply_norm(params["post_mixer_norm"], y, cfg.norm)
+    x = x + y
+
+    if "cross" in params:
+        h = apply_norm(params["cross_norm"], x, cfg.norm)
+        y = attn.attend_cross(params["cross"], cfg.attention, tp, h, cross_kv,
+                              q_block=q_block)
+        x = x + y
+
+    if ent.mlp != "none":
+        h = apply_norm(params["pre_mlp_norm"], x, cfg.norm)
+        if ent.mlp == "moe":
+            y, aux = moe_mod.apply_moe(params["mlp"], h, cfg.moe,
+                                       batch_sharded=x.shape[0] > 1)
+        else:
+            act = "gelu" if cfg.name.startswith("gemma") else "silu"
+            y = apply_mlp(params["mlp"], h, cfg.mlp_gated, act)
+        if cfg.post_block_norm:
+            y = apply_norm(params["post_mlp_norm"], y, cfg.norm)
+        x = x + y
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# Period (one repetition of the pattern) and stacks
+# --------------------------------------------------------------------------
+
+def period_spec(cfg: ArchConfig, tp: int,
+                cross_attention: bool = False) -> Dict[str, Any]:
+    return {
+        f"i{j}": block_spec(cfg, kind, tp, cross_attention)
+        for j, kind in enumerate(cfg.block_pattern)
+    }
+
+
+def stack_spec(cfg: ArchConfig, tp: int, n_periods: Optional[int] = None,
+               cross_attention: bool = False) -> Dict[str, Any]:
+    n = n_periods if n_periods is not None else cfg.n_periods
+    return stack_specs(period_spec(cfg, tp, cross_attention), n)
+
+
+def period_cache_shapes(cfg: ArchConfig, tp: int, batch: int,
+                        s_max: int) -> Dict[str, Any]:
+    return {
+        f"i{j}": block_cache_shapes(cfg, kind, tp, batch, s_max)
+        for j, kind in enumerate(cfg.block_pattern)
+    }
+
+
+def apply_period(cfg: ArchConfig, tp: int, params: Dict[str, Any],
+                 x: jax.Array, *, mode: str, positions: jax.Array,
+                 cache: Optional[Dict[str, Any]] = None,
+                 cur_len: Optional[jax.Array] = None,
+                 cross_kv: Optional[Tuple] = None,
+                 q_block: int = 1024):
+    new_cache: Dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+    for j, kind in enumerate(cfg.block_pattern):
+        key = f"i{j}"
+        ck = cross_kv[key] if isinstance(cross_kv, dict) else cross_kv
+        x, nc, a = apply_block(
+            cfg, kind, tp, params[key], x, mode=mode, positions=positions,
+            cache=None if cache is None else cache[key], cur_len=cur_len,
+            cross_kv=ck, q_block=q_block)
+        new_cache[key] = nc
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def apply_stack(cfg: ArchConfig, tp: int, stacked_params: Dict[str, Any],
+                x: jax.Array, *, mode: str, positions: jax.Array,
+                cache: Optional[Dict[str, Any]] = None,
+                cur_len: Optional[jax.Array] = None,
+                cross_kv: Optional[Any] = None,
+                q_block: int = 1024,
+                remat: bool = True):
+    """Scan the stacked periods. cache (if given) has leading n_periods dim.
+
+    Returns (x, new_cache (stacked) or None, total moe aux).
+    """
+    use_cache = cache is not None
+
+    def body(carry, xs):
+        xc, aux = carry
+        if use_cache:
+            p_params, p_cache, p_ckv = xs
+        else:
+            p_params, p_ckv = xs
+            p_cache = None
+        xc, new_cache, a = apply_period(
+            cfg, tp, p_params, xc, mode=mode, positions=positions,
+            cache=p_cache, cur_len=cur_len, cross_kv=p_ckv, q_block=q_block)
+        return (xc, aux + a), (new_cache if use_cache or mode == "prefill_cache"
+                               else 0)
+
+    if remat:
+        import os
+
+        if os.environ.get("REPRO_REMAT_DOTS") == "1":
+            # §Perf H4: save matmul outputs inside each period instead of
+            # recomputing the whole period in the backward pass — trades
+            # HBM headroom for the ~2ND recompute FLOPs.
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            body = jax.checkpoint(body)
+
+    xs: Tuple = (stacked_params,)
+    if use_cache:
+        xs = xs + (cache,)
+    # cross_kv stacked per-period (enc-dec) or None broadcast
+    if cross_kv is not None:
+        xs = xs + (cross_kv,)
+    else:
+        xs = xs + (jnp.zeros((cfg.n_periods,)),)  # dummy scanned leaf
+
+    (x, aux), out_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        xs, unroll=scan_unroll(cfg.n_periods))
+    if use_cache or mode == "prefill_cache":
+        return x, out_caches, aux
+    return x, None, aux

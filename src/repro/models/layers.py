@@ -1,0 +1,184 @@
+"""Core layers: norms, rotary embeddings, MLPs, embeddings, soft-capping.
+
+All functions are pure (params passed explicitly); logical-axis sharding
+constraints are applied via repro.common.sharding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import shard_constraint
+from repro.models.param import ParamSpec
+
+
+# --------------------------------------------------------------------------
+# Normalization
+# --------------------------------------------------------------------------
+
+def norm_spec(d: int, kind: str) -> Dict[str, ParamSpec]:
+    if kind == "layernorm":
+        return {
+            "scale": ParamSpec((d,), ("embed",), "ones"),
+            "bias": ParamSpec((d,), ("embed",), "zeros"),
+        }
+    return {"scale": ParamSpec((d,), ("embed",), "ones")}
+
+
+def apply_norm(params: Dict[str, Any], x: jax.Array, kind: str,
+               eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32
+        )
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def rms_norm_simple(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Scale-only RMSNorm used for qk-norm (per-head-dim scale)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (full / partial / theta-configurable)
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, rotary_pct: float, theta: float) -> jax.Array:
+    rot_dim = int(head_dim * rotary_pct)
+    rot_dim -= rot_dim % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv  # (rot_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, rotary_pct: float,
+               theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    rot_dim = int(head_dim * rotary_pct)
+    rot_dim -= rot_dim % 2
+    if rot_dim == 0:
+        return x
+    inv = rope_freqs(head_dim, rotary_pct, theta)  # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = x_rot[..., : rot_dim // 2], x_rot[..., rot_dim // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([y1, y2, x_pass], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Soft-capping (gemma2)
+# --------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x / cap)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# --------------------------------------------------------------------------
+
+def mlp_spec(d_model: int, d_ff: int, gated: bool = True) -> Dict[str, ParamSpec]:
+    spec = {
+        "w_in": ParamSpec((d_model, d_ff), ("fsdp", "mlp")),
+        "w_out": ParamSpec((d_ff, d_model), ("mlp", "fsdp")),
+    }
+    if gated:
+        spec["w_gate"] = ParamSpec((d_model, d_ff), ("fsdp", "mlp"))
+    return spec
+
+
+def apply_mlp(params: Dict[str, Any], x: jax.Array, gated: bool = True,
+              act: str = "silu") -> jax.Array:
+    """x: (B, S, d_model) -> (B, S, d_model); hidden sharded over 'model'."""
+    dtype = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(dtype))
+    h = shard_constraint(h, "batch", "seq", "mlp")
+    if act == "gelu":
+        h_act = jax.nn.gelu(h)
+    else:
+        h_act = jax.nn.silu(h)
+    if gated:
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dtype))
+        h_act = h_act * g
+    out = jnp.einsum("bsf,fd->bsd", h_act, params["w_out"].astype(dtype))
+    return shard_constraint(out, "batch", "seq", "embed")
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def embed_spec(vocab: int, d_model: int, tie: bool) -> Dict[str, ParamSpec]:
+    spec = {"table": ParamSpec((vocab, d_model), ("vocab", "fsdp"), "small")}
+    if not tie:
+        spec["unembed"] = ParamSpec((d_model, vocab), ("fsdp", "vocab"))
+    return spec
+
+
+def embed_tokens(params: Dict[str, Any], tokens: jax.Array, dtype: Any,
+                 scale: Optional[float] = None) -> jax.Array:
+    x = jnp.take(params["table"].astype(dtype), tokens, axis=0)
+    if scale is not None:
+        x = (x * jnp.asarray(scale, dtype)).astype(dtype)
+    return shard_constraint(x, "batch", "seq", "embed")
+
+
+def unembed(params: Dict[str, Any], x: jax.Array,
+            final_cap: Optional[float] = None) -> jax.Array:
+    if "unembed" in params:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, params["table"].astype(x.dtype)
+        )
+    logits = softcap(logits, final_cap)
+    return shard_constraint(logits, "batch", "seq", "vocab")
+
+
+# --------------------------------------------------------------------------
+# Cross-entropy with z-loss (vocab-sharded safe: pure reductions)
+# --------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_coef: float = 1e-4) -> Tuple[jax.Array, jax.Array]:
+    """logits (B,S,V) fp-any, labels (B,S) int32. Returns (loss, z_loss).
+
+    REPRO_ONEHOT_CE=1 (§Perf H1): the label pick runs as a one-hot masked
+    reduction instead of take_along_axis — a gather over the vocab-sharded
+    axis makes GSPMD all-gather the logits; the masked reduction partitions
+    like logsumexp (partial-reduce + tiny psum).
+    """
+    import os
+
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)  # (B,S)
+    if os.environ.get("REPRO_ONEHOT_CE") == "1":
+        v = logits.shape[-1]
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        mask = iota == labels[..., None]
+        ll = jnp.sum(jnp.where(mask, logits, 0.0), axis=-1)
+    else:
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    zl = z_coef * jnp.square(lse)
+    return jnp.mean(nll), jnp.mean(zl)

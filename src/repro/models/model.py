@@ -1,0 +1,247 @@
+"""LM: the unified model API over every assigned architecture.
+
+One class covers decoder-only (dense / MoE / hybrid / SSM), encoder-decoder
+(seamless-m4t) and stub-frontend multimodal (pixtral patches, seamless audio
+frames).  All entry points are pure functions of (params, inputs) so they
+jit/pjit directly:
+
+    lm = LM(cfg, tp)
+    spec   = lm.spec()                       # ParamSpec tree
+    loss   = lm.loss(params, batch)          # train
+    logits, cache = lm.prefill(params, batch, cache)
+    logits, cache = lm.decode(params, tokens, cache, cur_len)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ArchConfig, BlockSpecEntry
+from repro.common.sharding import shard_constraint
+from repro.models import blocks as blk
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_norm,
+    cross_entropy,
+    embed_spec,
+    embed_tokens,
+    norm_spec,
+    unembed,
+)
+from repro.models.param import ParamSpec, count_params, stack as stack_specs
+
+
+def is_shape_leaf(x: Any) -> bool:
+    """A (shape, logical_axes) pair: shape is a tuple of ints."""
+    return (
+        isinstance(x, tuple)
+        and len(x) == 2
+        and isinstance(x[0], tuple)
+        and all(isinstance(i, int) for i in x[0])
+    )
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig, tp: int = 1, q_block: int = 1024):
+        self.cfg = cfg
+        self.tp = tp
+        self.q_block = q_block
+
+    # ------------------------------------------------------------------
+    # Parameter spec
+    # ------------------------------------------------------------------
+    def spec(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        spec: Dict[str, Any] = {
+            "embed": embed_spec(cfg.padded_vocab, cfg.d_model,
+                                cfg.tie_embeddings),
+            "stack": blk.stack_spec(cfg, self.tp,
+                                    cross_attention=cfg.encoder_decoder),
+            "final_norm": norm_spec(cfg.d_model, cfg.norm),
+        }
+        if cfg.encoder_decoder:
+            enc_periods = cfg.n_encoder_layers // len(cfg.block_pattern)
+            spec["encoder"] = {
+                "stack": blk.stack_spec(cfg, self.tp, n_periods=enc_periods),
+                "final_norm": norm_spec(cfg.d_model, cfg.norm),
+            }
+        return spec
+
+    # ------------------------------------------------------------------
+    # Embedding with optional multimodal stubs
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens: jax.Array, batch: Dict[str, Any],
+               dtype) -> jax.Array:
+        cfg = self.cfg
+        scale = float(cfg.d_model) ** 0.5 if cfg.embed_scale else None
+        x = embed_tokens(params["embed"], tokens, dtype, scale)
+        if cfg.frontend == "patch" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(dtype)   # (B, P, d)
+            pp = batch["patch_pos"]                    # (B, P) int32
+            bidx = jnp.arange(x.shape[0])[:, None]
+            x = x.at[bidx, pp].add(pe)
+        return x
+
+    def _encode(self, params, frames: jax.Array) -> jax.Array:
+        """Audio/any encoder over stub frame embeddings (B, T, d_model)."""
+        cfg = self.cfg
+        x = frames
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, _, _ = blk.apply_stack(
+            cfg, self.tp, params["encoder"]["stack"], x, mode="encode",
+            positions=positions, q_block=self.q_block, remat=cfg.remat)
+        return apply_norm(params["encoder"]["final_norm"], x, cfg.norm)
+
+    # ------------------------------------------------------------------
+    # Train forward + loss
+    # ------------------------------------------------------------------
+    def logits_causal(self, params, batch: Dict[str, Any],
+                      dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens, batch, dtype)
+        positions = jnp.arange(tokens.shape[1])[None, :]
+        cross_kv = None
+        if cfg.encoder_decoder:
+            enc_out = self._encode(params, batch["frames"].astype(dtype))
+            cross_kv = self._cross_kv_stack(params, enc_out)
+        x, _, aux = blk.apply_stack(
+            cfg, self.tp, params["stack"], x, mode="causal",
+            positions=positions, cross_kv=cross_kv, q_block=self.q_block,
+            remat=cfg.remat)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = unembed(params["embed"], x, cfg.final_softcap)
+        return logits, aux
+
+    def loss(self, params, batch: Dict[str, Any],
+             dtype=jnp.bfloat16) -> jax.Array:
+        logits, aux = self.logits_causal(params, batch, dtype)
+        labels = batch["labels"]
+        # mask padded label positions (label < 0)
+        safe = jnp.maximum(labels, 0)
+        nll, zl = cross_entropy(logits, safe)
+        return nll + zl + aux
+
+    # ------------------------------------------------------------------
+    # Cross-attention KV (enc-dec)
+    # ------------------------------------------------------------------
+    def _cross_kv_stack(self, params, enc_out: jax.Array):
+        """Project encoder output into stacked per-period cross K/V dicts."""
+        cfg = self.cfg
+
+        def per_period(p_params):
+            out = {}
+            for j in range(len(cfg.block_pattern)):
+                key = f"i{j}"
+                out[key] = attn.cross_kv(p_params[key]["cross"],
+                                         cfg.attention, self.tp, enc_out)
+            return out
+
+        return jax.vmap(per_period, in_axes=0)(params["stack"])
+
+    # ------------------------------------------------------------------
+    # KV / state cache
+    # ------------------------------------------------------------------
+    def cache_shapes(self, batch: int, s_max: int,
+                     t_src: int = 0) -> Dict[str, Any]:
+        """Tree of (shape, logical_axes) for the decode cache."""
+        cfg = self.cfg
+        per = blk.period_cache_shapes(cfg, self.tp, batch, s_max)
+
+        def add_layers(leaf):
+            shape, axes = leaf
+            return ((cfg.n_periods,) + shape, ("layers",) + axes)
+
+        tree = jax.tree_util.tree_map(add_layers, per, is_leaf=is_shape_leaf)
+        out = {"layers": tree}
+        if cfg.encoder_decoder:
+            _, hkv_e, _ = attn.head_layout(cfg.attention, self.tp)
+            d = cfg.attention.head_dim
+            ckv = {}
+            for j in range(len(cfg.block_pattern)):
+                shp = (cfg.n_periods, batch, t_src, hkv_e, d)
+                axes = ("layers", "batch", None, "kv_heads", "head_dim")
+                ckv[f"i{j}"] = ((shp, axes), (shp, axes))
+            out["cross"] = ckv
+        return out
+
+    def init_cache(self, batch: int, s_max: int, t_src: int = 0,
+                   dtype=jnp.bfloat16) -> Dict[str, Any]:
+        shapes = self.cache_shapes(batch, s_max, t_src)
+
+        def mk(leaf):
+            shape, _ = leaf
+            return jnp.zeros(shape, dtype)
+
+        return jax.tree_util.tree_map(mk, shapes, is_leaf=is_shape_leaf)
+
+    # ------------------------------------------------------------------
+    # Prefill / decode
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, Any], cache: Dict[str, Any],
+                dtype=jnp.bfloat16, last_pos: Optional[jax.Array] = None):
+        """Run the prompt through the model, filling the cache.
+
+        ``last_pos`` (B,) optionally selects which position's logits to
+        return (for right-padded prompts); defaults to the final position.
+        Returns (logits (B,1,V), cache).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens, batch, dtype)
+        positions = jnp.arange(tokens.shape[1])[None, :]
+        cross_kv = cache.get("cross")
+        if cfg.encoder_decoder and "frames" in batch:
+            enc_out = self._encode(params, batch["frames"].astype(dtype))
+            cross_kv = self._cross_kv_stack(params, enc_out)
+        x, new_layer_cache, _ = blk.apply_stack(
+            cfg, self.tp, params["stack"], x, mode="prefill_cache",
+            positions=positions, cache=cache["layers"], cross_kv=cross_kv,
+            q_block=self.q_block, remat=False)
+        if last_pos is not None:
+            x = jnp.take_along_axis(x, last_pos[:, None, None], axis=1)
+        else:
+            x = x[:, -1:]
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = unembed(params["embed"], x, cfg.final_softcap)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layer_cache
+        if cfg.encoder_decoder:
+            new_cache["cross"] = cross_kv
+        return logits, new_cache
+
+    def decode(self, params, tokens: jax.Array, cache: Dict[str, Any],
+               cur_len: jax.Array, dtype=jnp.bfloat16):
+        """One decode step. tokens (B,1) -> (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, {}, dtype)
+        positions = cur_len[None, None] if cur_len.ndim == 0 else cur_len
+        x, new_layer_cache, _ = blk.apply_stack(
+            cfg, self.tp, params["stack"], x, mode="decode",
+            positions=positions, cache=cache["layers"], cur_len=cur_len,
+            cross_kv=cache.get("cross"), q_block=self.q_block, remat=False)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = unembed(params["embed"], x, cfg.final_softcap)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layer_cache
+        return logits, new_cache
+
+
+# --------------------------------------------------------------------------
+# Parameter counting (for MODEL_FLOPS = 6·N·D in the roofline)
+# --------------------------------------------------------------------------
+
+def param_count_estimate(cfg: ArchConfig, active_only: bool = False) -> int:
+    lm = LM(cfg, tp=1)
+    total = count_params(lm.spec())
+    if active_only and cfg.has_moe:
+        n_moe_layers = sum(
+            1 for k in cfg.block_pattern if BlockSpecEntry.parse(k).mlp == "moe"
+        ) * cfg.n_periods
+        per_layer_expert = 3 * cfg.moe.n_experts * cfg.d_model * cfg.moe.d_ff_expert
+        inactive_frac = (cfg.moe.n_experts - cfg.moe.top_k) / cfg.moe.n_experts
+        total -= int(n_moe_layers * per_layer_expert * inactive_frac)
+    return total

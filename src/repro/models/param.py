@@ -1,0 +1,90 @@
+"""Parameter specs: one tree describes shapes, logical axes, and init.
+
+``spec`` trees are nested dicts whose leaves are ``ParamSpec``.  From one spec
+tree we derive:
+  * ``materialize(spec, key, dtype)``  -> real arrays (smoke tests, streaming)
+  * ``abstract(spec, dtype)``          -> ShapeDtypeStructs (dry-run, no alloc)
+  * ``axes_tree(spec)``                -> logical-axes tuples (for shardings)
+  * ``stack(spec, n)``                 -> add leading "layers" dim (scan stacks)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map_specs(fn: Callable[[ParamSpec], Any], spec: Any) -> Any:
+    return jax.tree_util.tree_map(fn, spec, is_leaf=is_spec)
+
+
+def stack(spec: Any, n: int) -> Any:
+    """Add a leading scanned 'layers' dimension of size n to every param."""
+
+    def _stack(p: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + p.shape, ("layers",) + p.axes, p.init, p.scale)
+
+    return _tree_map_specs(_stack, spec)
+
+
+def abstract(spec: Any, dtype: Any = jnp.float32) -> Any:
+    return _tree_map_specs(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(dtype)), spec
+    )
+
+
+def axes_tree(spec: Any) -> Any:
+    return _tree_map_specs(lambda p: p.axes, spec)
+
+
+def _init_one(p: ParamSpec, key: jax.Array, dtype: Any) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "small":
+        return (0.02 * p.scale) * jax.random.normal(key, p.shape, dtype)
+    if p.init == "normal":
+        return p.scale * jax.random.normal(key, p.shape, dtype)
+    # fan_in: scaled by 1/sqrt(fan_in) where fan_in = second-to-last dim
+    fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+    std = p.scale / np.sqrt(max(fan_in, 1))
+    return std * jax.random.normal(key, p.shape, dtype)
+
+
+def materialize(spec: Any, key: jax.Array, dtype: Any = jnp.float32) -> Any:
+    """Create real parameter arrays (deterministic per tree path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(p, k, dtype) for p, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def cast_tree(tree: Any, dtype: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if hasattr(x, "astype") else x, tree
+    )
+
+
+def count_params(spec: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(spec, is_leaf=is_spec)
+    return sum(int(np.prod(p.shape)) for p in leaves if is_spec(p))

@@ -1,0 +1,293 @@
+"""Mamba2 (SSD — state-space duality) mixer, TPU-adapted.
+
+Chunked SSD: within-chunk terms are batched matmuls (MXU-friendly); the
+inter-chunk state recurrence is a short ``lax.scan`` over chunks.  Decode is
+a single recurrent step on an O(1) state — which is why SSM/hybrid archs are
+the ones that run the ``long_500k`` cell.
+
+Heads are padded to a multiple of the TP degree; padded heads are zeroed at
+the x-projection, which makes them exact no-ops end-to-end (state stays 0,
+y stays 0, gradients to padded params stay 0).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import SSMConfig
+from repro.common.sharding import shard_constraint
+from repro.common.utils import pad_to_multiple, scan_unroll
+from repro.models.layers import rms_norm_simple
+from repro.models.param import ParamSpec
+
+
+def ssm_dims(d_model: int, ssm: SSMConfig, tp: int = 1) -> Tuple[int, int]:
+    """(true head count, tp-padded head count)."""
+    d_inner = d_model * ssm.expand
+    h = d_inner // ssm.head_dim
+    return h, pad_to_multiple(h, tp)
+
+
+def mamba_spec(d_model: int, ssm: SSMConfig, tp: int) -> Dict[str, ParamSpec]:
+    h, h_p = ssm_dims(d_model, ssm, tp)
+    p, n, g, k = ssm.head_dim, ssm.d_state, ssm.n_groups, ssm.d_conv
+    return {
+        "z_proj": ParamSpec((d_model, h_p, p), ("fsdp", "ssm_heads", None)),
+        "x_proj": ParamSpec((d_model, h_p, p), ("fsdp", "ssm_heads", None)),
+        "B_proj": ParamSpec((d_model, g, n), ("fsdp", None, "ssm_state")),
+        "C_proj": ParamSpec((d_model, g, n), ("fsdp", None, "ssm_state")),
+        "dt_proj": ParamSpec((d_model, h_p), ("fsdp", "ssm_heads"), "small"),
+        "dt_bias": ParamSpec((h_p,), ("ssm_heads",), "zeros"),
+        "A_log": ParamSpec((h_p,), ("ssm_heads",), "zeros"),
+        "D": ParamSpec((h_p,), ("ssm_heads",), "ones"),
+        "conv_w_x": ParamSpec((h_p, p, k), ("ssm_heads", None, "conv"), "small"),
+        "conv_b_x": ParamSpec((h_p, p), ("ssm_heads", None), "zeros"),
+        "conv_w_B": ParamSpec((g, n, k), (None, "ssm_state", "conv"), "small"),
+        "conv_b_B": ParamSpec((g, n), (None, "ssm_state"), "zeros"),
+        "conv_w_C": ParamSpec((g, n, k), (None, "ssm_state", "conv"), "small"),
+        "conv_b_C": ParamSpec((g, n), (None, "ssm_state"), "zeros"),
+        "norm_scale": ParamSpec((h_p, p), ("ssm_heads", None), "ones"),
+        "out_proj": ParamSpec((h_p, p, d_model), ("ssm_heads", None, "fsdp")),
+    }
+
+
+def _head_mask(h: int, h_p: int, dtype) -> Optional[jax.Array]:
+    if h == h_p:
+        return None
+    m = np.zeros((h_p,), np.float32)
+    m[:h] = 1.0
+    return jnp.asarray(m, dtype)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv as K shifted adds.
+
+    x (B, L, C1, C2), w (C1, C2, K), b (C1, C2).
+    """
+    k = w.shape[-1]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        if shift == 0:
+            xi = x
+        else:
+            xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[..., i]
+    return out + b
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int,
+                 init_state: Optional[jax.Array] = None):
+    """Exact chunked SSD.
+
+    x (b,l,h,p)  dt (b,l,h) fp32  A (h,) fp32  Bm/Cm (b,l,g,n)  D (h,)
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    nc = l // chunk
+    q = chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bh = jnp.repeat(Bm.reshape(b, nc, q, g, n), rep, axis=3)  # (b,nc,q,h,n)
+    Ch = jnp.repeat(Cm.reshape(b, nc, q, g, n), rep, axis=3)
+
+    dA = dtc * A                                     # (b,nc,q,h) — negative
+    cs = jnp.cumsum(dA, axis=2)                      # inclusive cumsum
+    total = cs[:, :, -1, :]                          # (b,nc,h)
+
+    # ---- within-chunk (quadratic in q, MXU matmuls) ----
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # (b,nc,i,j,h)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Ch.astype(jnp.float32),
+                    Bh.astype(jnp.float32))
+    w_mat = cb * Lmat * dtc[:, :, None, :, :]            # (b,nc,i,j,h)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w_mat, xc.astype(jnp.float32))
+
+    # ---- end-of-chunk local states ----
+    decay_end = jnp.exp(total[:, :, None, :] - cs)        # (b,nc,q,h)
+    s_local = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp",
+                         decay_end * dtc, Bh.astype(jnp.float32),
+                         xc.astype(jnp.float32))          # (b,nc,h,n,p)
+
+    # ---- inter-chunk recurrence ----
+    if init_state is None:
+        s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    else:
+        s0 = jnp.swapaxes(init_state.astype(jnp.float32), -1, -2)
+
+    def scan_fn(s_prev, inp):
+        tot_c, s_loc = inp  # (b,h), (b,h,n,p)
+        s_out = jnp.exp(tot_c)[:, :, None, None] * s_prev + s_loc
+        return s_out, s_prev
+
+    # NOTE: deliberately not unrolled under REPRO_UNROLL_SCANS — the state
+    # recurrence body is O(b·h·n·p) (negligible vs the batched within-chunk
+    # einsums outside this scan), and unrolling nc=2048 bodies would explode
+    # compile time for a <0.1% FLOP correction.
+    s_final, s_ins = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(total, 1, 0), jnp.moveaxis(s_local, 1, 0)))
+    s_in = jnp.moveaxis(s_ins, 0, 1)                      # (b,nc,h,n,p)
+
+    # ---- cross-chunk contribution ----
+    c_decay = Ch.astype(jnp.float32) * jnp.exp(cs)[..., None]  # (b,nc,q,h,n)
+    y_off = jnp.einsum("bcqhn,bchnp->bcqhp", c_decay, s_in)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    y = y + D.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    final_state = jnp.swapaxes(s_final, -1, -2)           # (b,h,p,n)
+    return y.astype(x.dtype), final_state.astype(x.dtype)
+
+
+def _project_and_conv(params, ssm: SSMConfig, x: jax.Array):
+    """Shared projection+conv for prefill paths. x (B,L,d)."""
+    dtype = x.dtype
+    d = x.shape[-1]
+    h_p = params["A_log"].shape[0]
+    h_true, _ = ssm_dims(d, ssm)
+
+    z = jnp.einsum("bld,dhp->blhp", x, params["z_proj"].astype(dtype))
+    xs0 = jnp.einsum("bld,dhp->blhp", x, params["x_proj"].astype(dtype))
+    Bm0 = jnp.einsum("bld,dgn->blgn", x, params["B_proj"].astype(dtype))
+    Cm0 = jnp.einsum("bld,dgn->blgn", x, params["C_proj"].astype(dtype))
+    dt = jnp.einsum("bld,dh->blh", x, params["dt_proj"].astype(dtype))
+
+    hm = _head_mask(h_true, h_p, dtype)
+    if hm is not None:
+        xs0 = xs0 * hm[None, None, :, None]
+    xs0 = shard_constraint(xs0, "batch", "seq", "ssm_heads", None)
+
+    xs = jax.nn.silu(_causal_conv(xs0, params["conv_w_x"].astype(dtype),
+                                  params["conv_b_x"].astype(dtype)))
+    Bm = jax.nn.silu(_causal_conv(Bm0, params["conv_w_B"].astype(dtype),
+                                  params["conv_b_B"].astype(dtype)))
+    Cm = jax.nn.silu(_causal_conv(Cm0, params["conv_w_C"].astype(dtype),
+                                  params["conv_b_C"].astype(dtype)))
+    if hm is not None:
+        xs = xs * hm[None, None, :, None]  # re-zero after conv bias
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    return z, xs, Bm, Cm, dt, (xs0, Bm0, Cm0)
+
+
+def mamba_prefill(params: Dict[str, Any], ssm: SSMConfig, tp: int,
+                  x: jax.Array) -> jax.Array:
+    """x (B,L,d) -> y (B,L,d). Train / prefill without cache."""
+    b, l, d = x.shape
+    dtype = x.dtype
+    z, xs, Bm, Cm, dt, _ = _project_and_conv(params, ssm, x)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, _ = _ssd_chunked(xs, dt, A, Bm, Cm, params["D"], min(ssm.chunk, l))
+    y = rms_norm_simple(y * jax.nn.silu(z), params["norm_scale"])
+    out = jnp.einsum("blhp,hpd->bld", y, params["out_proj"].astype(dtype))
+    return shard_constraint(out, "batch", "seq", "embed")
+
+
+def mamba_prefill_with_cache(params, ssm: SSMConfig, tp: int, x: jax.Array):
+    """Prefill that also returns a decode-ready cache."""
+    b, l, d = x.shape
+    dtype = x.dtype
+    k = ssm.d_conv
+    z, xs, Bm, Cm, dt, (xs0, Bm0, Cm0) = _project_and_conv(params, ssm, x)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, final_state = _ssd_chunked(xs, dt, A, Bm, Cm, params["D"],
+                                  min(ssm.chunk, l))
+    y = rms_norm_simple(y * jax.nn.silu(z), params["norm_scale"])
+    out = jnp.einsum("blhp,hpd->bld", y, params["out_proj"].astype(dtype))
+    cache = {
+        "ssm": final_state,                     # (B,H,P,N)
+        "conv_x": xs0[:, -(k - 1):],            # pre-activation tails
+        "conv_B": Bm0[:, -(k - 1):],
+        "conv_C": Cm0[:, -(k - 1):],
+    }
+    return shard_constraint(out, "batch", "seq", "embed"), cache
+
+
+def mamba_decode_cache_spec(d_model: int, ssm: SSMConfig, tp: int,
+                            batch: int) -> Dict[str, Tuple]:
+    """Shapes + logical axes of the decode cache (for input_specs)."""
+    _, h_p = ssm_dims(d_model, ssm, tp)
+    p, n, g, k = ssm.head_dim, ssm.d_state, ssm.n_groups, ssm.d_conv
+    return {
+        "ssm": ((batch, h_p, p, n), ("batch", "ssm_heads", None, "ssm_state")),
+        "conv_x": ((batch, k - 1, h_p, p), ("batch", "conv", "ssm_heads", None)),
+        "conv_B": ((batch, k - 1, g, n), ("batch", "conv", None, "ssm_state")),
+        "conv_C": ((batch, k - 1, g, n), ("batch", "conv", None, "ssm_state")),
+    }
+
+
+def mamba_decode(params: Dict[str, Any], ssm: SSMConfig, tp: int,
+                 x: jax.Array, cache: Dict[str, jax.Array]):
+    """Single-step decode. x (B,1,d) -> (y (B,1,d), new cache)."""
+    b, _, d = x.shape
+    dtype = x.dtype
+    h_p = params["A_log"].shape[0]
+    h_true, _ = ssm_dims(d, ssm)
+    k = ssm.d_conv
+    xt = x[:, 0]  # (B,d)
+
+    z = jnp.einsum("bd,dhp->bhp", xt, params["z_proj"].astype(dtype))
+    xs0 = jnp.einsum("bd,dhp->bhp", xt, params["x_proj"].astype(dtype))
+    Bm0 = jnp.einsum("bd,dgn->bgn", xt, params["B_proj"].astype(dtype))
+    Cm0 = jnp.einsum("bd,dgn->bgn", xt, params["C_proj"].astype(dtype))
+    dt = jnp.einsum("bd,dh->bh", xt, params["dt_proj"].astype(dtype))
+
+    hm = _head_mask(h_true, h_p, dtype)
+    if hm is not None:
+        xs0 = xs0 * hm[None, :, None]
+
+    def conv_step(tail, cur, w, bias):
+        """tail (B,k-1,...), cur (B,...) -> (conv output, new tail)."""
+        full = jnp.concatenate([tail, cur[:, None]], axis=1)  # (B,k,...)
+        acc = bias
+        for i in range(k):
+            acc = acc + full[:, i] * w[..., i]
+        return acc, full[:, 1:]
+
+    xs, _ = conv_step(cache["conv_x"], xs0,
+                      params["conv_w_x"].astype(dtype),
+                      params["conv_b_x"].astype(dtype))
+    Bm, _ = conv_step(cache["conv_B"], Bm0,
+                      params["conv_w_B"].astype(dtype),
+                      params["conv_b_B"].astype(dtype))
+    Cm, _ = conv_step(cache["conv_C"], Cm0,
+                      params["conv_w_C"].astype(dtype),
+                      params["conv_b_C"].astype(dtype))
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    if hm is not None:
+        xs = xs * hm[None, :, None]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)  # (B,H)
+
+    g = ssm.n_groups
+    rep = h_p // g
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)   # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+
+    state = cache["ssm"].astype(jnp.float32)               # (B,H,P,N)
+    state = dA[:, :, None, None] * state + (
+        dt[:, :, None, None] * xs.astype(jnp.float32)[..., None]
+        * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xs.astype(
+        jnp.float32)
+    y = rms_norm_simple(y.astype(dtype) * jax.nn.silu(z), params["norm_scale"])
+    out = jnp.einsum("bhp,hpd->bd", y, params["out_proj"].astype(dtype))
+    new_cache = {
+        "ssm": state.astype(cache["ssm"].dtype),
+        "conv_x": jnp.concatenate([cache["conv_x"][:, 1:], xs0[:, None]], 1),
+        "conv_B": jnp.concatenate([cache["conv_B"][:, 1:], Bm0[:, None]], 1),
+        "conv_C": jnp.concatenate([cache["conv_C"][:, 1:], Cm0[:, None]], 1),
+    }
+    return out[:, None, :], new_cache

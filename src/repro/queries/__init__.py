@@ -1,0 +1,1 @@
+from repro.queries.catalog import QUERIES, Query, get_query

@@ -1,0 +1,3 @@
+from repro.serving.sampler import sample_logits
+from repro.serving.engine import ServingEngine, Request
+from repro.serving.quantize import quantize_params_int8

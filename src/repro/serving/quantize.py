@@ -1,0 +1,60 @@
+"""Physical-optimization: int8 weight quantization of model parameters.
+
+Quantizes the large 2D+ matmul weights (per-output-channel symmetric int8)
+and leaves vectors/norms in their original dtype — the standard W8 recipe
+the paper's physical phase applies ("quantization reduced the MLLM's weights
+and activations to 8-bit integers, halving model size and memory bandwidth").
+
+``QuantizedLinear`` leaves are dicts {"q": int8, "scale": f32}; ``dequant``
+reconstructs dense weights (used by the CPU fallback), while the TPU path
+feeds the int8_matmul Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.utils import tree_size_bytes
+
+MIN_QUANT_SIZE = 4096  # don't quantize tiny tensors (norms, biases)
+
+
+def _quantize_leaf(w: jax.Array) -> Any:
+    if w.ndim < 2 or w.size < MIN_QUANT_SIZE:
+        return w
+    # per-last-axis-channel symmetric scale over all other axes
+    amax = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)), keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return {"__quant__": True, "q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _is_quant(x: Any) -> bool:
+    return isinstance(x, dict) and x.get("__quant__") is True
+
+
+def quantize_params_int8(params: Any) -> Tuple[Any, Dict[str, float]]:
+    """Returns (quantized tree, {orig_bytes, quant_bytes, ratio})."""
+    orig = tree_size_bytes(params)
+    qparams = jax.tree_util.tree_map(_quantize_leaf, params)
+    stats_bytes = tree_size_bytes(
+        jax.tree_util.tree_map(
+            lambda x: x, qparams,
+            is_leaf=lambda x: hasattr(x, "shape")))
+    return qparams, {
+        "orig_bytes": float(orig),
+        "quant_bytes": float(stats_bytes),
+        "ratio": float(stats_bytes) / max(float(orig), 1.0),
+    }
+
+
+def dequantize_params(qparams: Any, dtype=jnp.float32) -> Any:
+    def deq(x):
+        if _is_quant(x):
+            return (x["q"].astype(jnp.float32) * x["scale"]).astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(deq, qparams, is_leaf=_is_quant)

@@ -1,0 +1,20 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_logits(logits: jax.Array, key: Optional[jax.Array] = None, *,
+                  temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """logits (B, V) -> tokens (B,) int32."""
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[:, -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,19 @@
+from repro.streaming.mllm import StreamMLLM, MLLM_TASKS
+from repro.streaming.detector import TinyDet
+from repro.streaming.operators import (
+    Op,
+    SourceOp,
+    SkipOp,
+    CropOp,
+    DownscaleOp,
+    GreyscaleOp,
+    FusedPreprocessOp,
+    CheapColorFilterOp,
+    DetectOp,
+    MLLMExtractOp,
+    FilterOp,
+    WindowAggOp,
+    SinkOp,
+)
+from repro.streaming.plan import Plan
+from repro.streaming.runtime import StreamRuntime, RunResult

@@ -1,0 +1,61 @@
+"""TinyDet: the cheap object detector the physical optimizer cascades before
+the MLLM (the paper's YOLOv8 role, built in-framework).
+
+A 3-conv stride-4 network over downscaled frames -> car-present logit +
+coarse occupancy grid (used by the semantic optimizer to locate the region
+of interest).  ~50k params => ~1000x cheaper than the stream MLLM.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.param import ParamSpec, materialize
+
+
+def tinydet_spec(in_ch: int = 3) -> Dict[str, Any]:
+    return {
+        "conv1": ParamSpec((4, 4, in_ch, 16), (None, None, None, None)),
+        "b1": ParamSpec((16,), (None,), "zeros"),
+        "conv2": ParamSpec((4, 4, 16, 32), (None, None, None, None)),
+        "b2": ParamSpec((32,), (None,), "zeros"),
+        "conv3": ParamSpec((3, 3, 32, 32), (None, None, None, None)),
+        "b3": ParamSpec((32,), (None,), "zeros"),
+        "head_present": ParamSpec((32, 2), (None, None)),
+        "head_grid": ParamSpec((32, 1), (None, None)),
+    }
+
+
+class TinyDet:
+    def __init__(self, in_ch: int = 3):
+        self.in_ch = in_ch
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        return materialize(tinydet_spec(self.in_ch), key, jnp.float32)
+
+    def forward(self, params: Dict[str, Any], frames: jax.Array
+                ) -> Dict[str, jax.Array]:
+        """frames (B, C, h, w) float -> {present (B,2), grid (B, gh, gw)}."""
+        x = frames.transpose(0, 2, 3, 1)             # NHWC
+        for w_key, b_key, stride in (("conv1", "b1", 4), ("conv2", "b2", 4),
+                                     ("conv3", "b3", 1)):
+            x = jax.lax.conv_general_dilated(
+                x, params[w_key], (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + params[b_key])
+        grid = (x @ params["head_grid"])[..., 0]     # (B, gh, gw)
+        pooled = x.mean(axis=(1, 2))                 # (B, 32)
+        present = pooled @ params["head_present"]    # (B, 2)
+        return {"present": present, "grid": grid}
+
+    def loss(self, params: Dict[str, Any], batch: Dict[str, jax.Array]
+             ) -> jax.Array:
+        out = self.forward(params, batch["frames"])
+        logits = out["present"]
+        labels = batch["present"]
+        lse = jax.nn.logsumexp(logits, -1)
+        ll = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+        return jnp.mean(lse - ll)

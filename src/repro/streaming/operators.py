@@ -1,0 +1,551 @@
+"""Streaming operators: declarative descriptors + jitted implementations.
+
+An operator is a *descriptor* dataclass (the unit the Saṃsāra optimizer
+rewrites) plus an ``open(ctx)``/``process(batch)`` runtime implementation.
+Batches flow host-side as dicts of numpy arrays (frames, indices, attrs);
+the compute inside each operator is jitted JAX.  Operators may drop rows
+(Skip / filters) — the runtime compacts and re-buckets between stages, which
+is what converts "fewer frames reach the MLLM" into real wall-clock FPS.
+
+State (skip counters, previous frame, window buffers) is explicit and
+snapshottable — the streaming analogue of Flink's aligned checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tollbooth import BRANDS, COLORS, COLOR_RGB, PLATE_CHARS
+from repro.data.volleyball import ACTIONS
+from repro.kernels.frame_diff.ops import frame_diff
+from repro.kernels.fused_preprocess.ops import fused_preprocess
+from repro.streaming.mllm import MLLM_TASKS, PLATE_LEN, StreamMLLM
+
+Batch = Dict[str, Any]
+
+
+def _bucket_pad(n: int, lo: int = 4) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+# ===========================================================================
+# Descriptor base
+# ===========================================================================
+
+@dataclasses.dataclass
+class Op:
+    """Base descriptor. Subclasses add parameters; runtime calls open()."""
+
+    #: estimated cost per input frame (µs) — filled by calibration
+    cost_us: float = dataclasses.field(default=0.0, init=False)
+
+    name: str = dataclasses.field(default="", init=False)
+
+    def open(self, ctx: "OpContext") -> None:  # pragma: no cover - interface
+        pass
+
+    def process(self, batch: Batch) -> Batch:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    # -- state snapshot (aligned checkpoint) --------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        return {}
+
+    def restore(self, st: Dict[str, Any]) -> None:
+        pass
+
+
+@dataclasses.dataclass
+class OpContext:
+    """Models/params every plan may reference."""
+
+    mllm: Optional[StreamMLLM] = None
+    mllm_params: Any = None
+    mllm_small: Optional[StreamMLLM] = None
+    mllm_small_params: Any = None
+    mllm_pruned_params: Any = None
+    detector: Any = None
+    detector_params: Any = None
+    frame_shape: Tuple[int, int, int] = (3, 128, 256)
+
+
+# ===========================================================================
+# Source / Sink
+# ===========================================================================
+
+@dataclasses.dataclass
+class SourceOp(Op):
+    stream_name: str = "tollbooth"
+
+    def __post_init__(self):
+        self.name = f"source[{self.stream_name}]"
+
+    def process(self, batch: Batch) -> Batch:
+        return batch
+
+
+@dataclasses.dataclass
+class SinkOp(Op):
+    def __post_init__(self):
+        self.name = "sink"
+        self.collected: List[Dict[str, Any]] = []
+
+    def process(self, batch: Batch) -> Batch:
+        n = len(batch["idx"])
+        for i in range(n):
+            rec = {"idx": int(batch["idx"][i])}
+            for k, v in batch.get("attrs", {}).items():
+                rec[k] = np.asarray(v[i]).tolist()
+            self.collected.append(rec)
+        if "window_results" in batch:
+            self.collected.extend(batch["window_results"])
+        return batch
+
+    def snapshot(self):
+        return {"n": len(self.collected)}
+
+
+# ===========================================================================
+# Semantic data-reduction operators (the paper's catalog)
+# ===========================================================================
+
+@dataclasses.dataclass
+class SkipOp(Op):
+    """Skip(Amount, Condition): after an "empty" frame, drop the next
+    ``amount`` frames without any further compute.  Emptiness = mean region
+    frame-diff against the last kept frame below ``threshold`` inside the
+    region of interest (cross-frame reasoning: cars cannot appear faster
+    than v_max allows)."""
+
+    amount: int = 3
+    condition: str = "no_car"
+    threshold: float = 0.02
+    roi: Optional[Tuple[int, int, int, int]] = None   # y0,x0,h,w region
+    regions: Tuple[int, int] = (4, 8)
+
+    def __post_init__(self):
+        self.name = f"skip[{self.amount},{self.condition}]"
+        self._prev: Optional[np.ndarray] = None
+        self._skip_left = 0
+
+    def open(self, ctx: OpContext) -> None:
+        self._diff = functools.partial(frame_diff, regions=self.regions)
+
+    def process(self, batch: Batch) -> Batch:
+        frames = batch["frames"]
+        n = frames.shape[0]
+        if n == 0:
+            return batch
+        keep = np.ones(n, bool)
+        # one batched kernel call: frame i vs frame i-1 (first vs carry)
+        prev0 = self._prev if self._prev is not None else frames[0]
+        prevs = np.concatenate([prev0[None], frames[:-1]], axis=0)
+        d = np.asarray(self._diff(frames, prevs))      # (n, ry, rx)
+        if self.roi is not None:
+            y0, x0, hh, ww = self.roi
+            ry, rx = self.regions
+            rh, rw = frames.shape[2] // ry, frames.shape[3] // rx
+            d = d[:, y0 // rh:(y0 + hh + rh - 1) // rh,
+                  x0 // rw:(x0 + ww + rw - 1) // rw]
+        act = d.reshape(n, -1).max(axis=1)             # per-frame activity
+        for i in range(n):                             # cheap host loop
+            if self._skip_left > 0:
+                self._skip_left -= 1
+                keep[i] = False
+                continue
+            if self._prev is None:
+                self._prev = frames[i]
+                continue
+            if act[i] < self.threshold:
+                keep[i] = False
+                self._skip_left = self.amount
+        self._prev = frames[-1]
+        return _mask_batch(batch, keep)
+
+    def snapshot(self):
+        return {"prev": self._prev, "skip_left": self._skip_left}
+
+    def restore(self, st):
+        self._prev = st["prev"]
+        self._skip_left = st["skip_left"]
+
+
+@dataclasses.dataclass
+class CropOp(Op):
+    """Crop(region): spatial projection (logical: projection pushdown)."""
+
+    region: Tuple[int, int, int, int] = (64, 0, 64, 256)  # y0,x0,h,w
+
+    def __post_init__(self):
+        self.name = f"crop{self.region}"
+
+    def process(self, batch: Batch) -> Batch:
+        y0, x0, h, w = self.region
+        batch = dict(batch)
+        batch["frames"] = batch["frames"][:, :, y0:y0 + h, x0:x0 + w]
+        return batch
+
+
+@dataclasses.dataclass
+class DownscaleOp(Op):
+    """Downscale(resolution): area-mean pooling (logical: aggregation)."""
+
+    factor: int = 2
+
+    def __post_init__(self):
+        self.name = f"downscale[{self.factor}]"
+
+    def process(self, batch: Batch) -> Batch:
+        f = self.factor
+        x = batch["frames"]
+        b, c, h, w = x.shape
+        x = x.reshape(b, c, h // f, f, w // f, f).astype(np.float32)
+        x = x.mean(axis=(3, 5))
+        batch = dict(batch)
+        batch["frames"] = x.astype(batch["frames"].dtype) \
+            if batch["frames"].dtype == np.uint8 else x
+        return batch
+
+
+@dataclasses.dataclass
+class GreyscaleOp(Op):
+    def __post_init__(self):
+        self.name = "greyscale"
+
+    def process(self, batch: Batch) -> Batch:
+        x = batch["frames"].astype(np.float32)
+        g = 0.299 * x[:, 0] + 0.587 * x[:, 1] + 0.114 * x[:, 2]
+        batch = dict(batch)
+        batch["frames"] = np.repeat(g[:, None], 3, axis=1).astype(
+            batch["frames"].dtype)
+        return batch
+
+
+@dataclasses.dataclass
+class FusedPreprocessOp(Op):
+    """Crop+Downscale+Normalize(+Greyscale) in one pass — produced by the
+    logical optimizer's fusion rule; maps to the Pallas kernel on TPU."""
+
+    crop: Tuple[int, int, int, int] = (0, 0, 128, 256)
+    factor: int = 1
+    grey: bool = False
+
+    def __post_init__(self):
+        self.name = f"fused_preprocess[{self.crop},/{self.factor}" + \
+            (",grey]" if self.grey else "]")
+
+    def open(self, ctx: OpContext) -> None:
+        self._fn = jax.jit(functools.partial(
+            fused_preprocess, crop=self.crop, factor=self.factor,
+            grey=self.grey))
+
+    def process(self, batch: Batch) -> Batch:
+        batch = dict(batch)
+        out = np.asarray(self._fn(jnp.asarray(batch["frames"])))
+        if self.grey:
+            out = np.repeat(out, 3, axis=1)
+        batch["frames"] = out
+        batch["normalized"] = True
+        return batch
+
+
+# ===========================================================================
+# Logical-phase cheap filters / physical-phase cascade
+# ===========================================================================
+
+@dataclasses.dataclass
+class CheapColorFilterOp(Op):
+    """Pixel-statistics filter: keep frames whose ROI contains at least
+    ``min_frac`` pixels near the target color (the paper's 'red-ish pixels'
+    pushdown filter, realized without any model)."""
+
+    color: str = "red"
+    min_frac: float = 0.01
+    roi: Optional[Tuple[int, int, int, int]] = None
+
+    def __post_init__(self):
+        self.name = f"cheap_color[{self.color}]"
+
+    def open(self, ctx: OpContext) -> None:
+        rgb = np.asarray(COLOR_RGB[self.color], np.float32)
+
+        @jax.jit
+        def frac(frames):
+            x = frames.astype(jnp.float32)
+            # normalized input? denormalize (traced-safe select)
+            x = jnp.where(x.max() <= 8.0, (x * 0.25 + 0.5) * 255.0, x)
+            d = jnp.linalg.norm(x.transpose(0, 2, 3, 1) - rgb, axis=-1)
+            near = (d < 70.0).astype(jnp.float32)
+            return near.mean(axis=(1, 2))
+
+        self._frac = frac
+
+    def process(self, batch: Batch) -> Batch:
+        if batch["frames"].shape[0] == 0:
+            return batch
+        roi_frames = batch["frames"]
+        if self.roi is not None:
+            y0, x0, h, w = self.roi
+            roi_frames = roi_frames[:, :, y0:y0 + h, x0:x0 + w]
+        frac = np.asarray(self._frac(jnp.asarray(roi_frames)))
+        return _mask_batch(batch, frac >= self.min_frac)
+
+
+@dataclasses.dataclass
+class DetectOp(Op):
+    """TinyDet cascade: drop frames without the object (physical phase)."""
+
+    threshold: float = 0.5
+
+    def __post_init__(self):
+        self.name = "tinydet"
+
+    def open(self, ctx: OpContext) -> None:
+        det, params = ctx.detector, ctx.detector_params
+
+        @jax.jit
+        def run(frames):
+            x = frames.astype(jnp.float32)
+            x = jnp.where(x.max() > 8.0, x / 255.0 - 0.5, x)
+            out = det.forward(params, x)
+            return jax.nn.softmax(out["present"], -1)[:, 1]
+
+        self._run = run
+
+    def process(self, batch: Batch) -> Batch:
+        if batch["frames"].shape[0] == 0:
+            return batch
+        p = np.asarray(self._run(jnp.asarray(batch["frames"])))
+        return _mask_batch(batch, p >= self.threshold)
+
+
+# ===========================================================================
+# The MLLM operator
+# ===========================================================================
+
+@dataclasses.dataclass
+class MLLMExtractOp(Op):
+    """Extract(tasks) with a selectable physical implementation.
+
+    model="adaptive" realizes the paper's *adaptive pruning*: the runtime
+    switches between the full and the pruned variant per micro-batch from
+    the observed stream density (aggressive pruning is safe in low-traffic
+    periods, risky in high-traffic ones)."""
+
+    tasks: Tuple[str, ...] = ("present", "color", "plate")
+    model: str = "big"          # big | small | pruned | adaptive
+    density_threshold: float = 0.35
+
+    def __post_init__(self):
+        self.name = f"mllm[{self.model}:{','.join(self.tasks)}]"
+        self.frames_processed = 0
+        self._density_ema = 0.5
+
+    def _make_run(self, mllm, params):
+        @jax.jit
+        def run(frames):
+            x = frames.astype(jnp.float32)
+            x = jnp.where(x.max() > 8.0, (x / 255.0 - 0.5) / 0.25, x)
+            out = mllm.forward(params, x)
+            return {k: jnp.argmax(v, -1) for k, v in out.items()}
+
+        return run
+
+    def open(self, ctx: OpContext) -> None:
+        self._micro_batch_hint = 16
+        if self.model == "small":
+            self._run = self._make_run(ctx.mllm_small, ctx.mllm_small_params)
+        elif self.model == "pruned":
+            self._run = self._make_run(ctx.mllm, ctx.mllm_pruned_params)
+        elif self.model == "adaptive":
+            self._run_big = self._make_run(ctx.mllm, ctx.mllm_params)
+            self._run_pruned = self._make_run(ctx.mllm,
+                                              ctx.mllm_pruned_params)
+            self._run = None
+        else:
+            self._run = self._make_run(ctx.mllm, ctx.mllm_params)
+
+    def process(self, batch: Batch) -> Batch:
+        n = batch["frames"].shape[0]
+        if n == 0:
+            return batch
+        self.frames_processed += n
+        bucket = _bucket_pad(n)
+        frames = batch["frames"]
+        if bucket != n:
+            pad = np.zeros((bucket - n,) + frames.shape[1:], frames.dtype)
+            frames = np.concatenate([frames, pad], 0)
+        if self.model == "adaptive":
+            density = n / max(self._micro_batch_hint, 1)
+            self._density_ema = 0.8 * self._density_ema + 0.2 * density
+            run = self._run_big if self._density_ema >= \
+                self.density_threshold else self._run_pruned
+        else:
+            run = self._run
+        preds = run(jnp.asarray(frames))
+        batch = dict(batch)
+        attrs = dict(batch.get("attrs", {}))
+        for k, v in preds.items():
+            attrs[k] = np.asarray(v)[:n]
+        batch["attrs"] = attrs
+        return batch
+
+    def snapshot(self):
+        return {"frames_processed": self.frames_processed,
+                "density_ema": self._density_ema}
+
+    def restore(self, st):
+        self.frames_processed = st["frames_processed"]
+        self._density_ema = st.get("density_ema", 0.5)
+
+
+# ===========================================================================
+# Relational tail: Filter / Window-Aggregate
+# ===========================================================================
+
+@dataclasses.dataclass
+class FilterOp(Op):
+    """Predicate on extracted attrs. Predicates are small s-expr tuples:
+      ("eq", "color", "red") | ("prefix", "plate", "MTT")
+      | ("and", p1, p2) | ("or", p1, p2) | ("eq", "action", "spike")
+    """
+
+    pred: Tuple = ("eq", "present", 1)
+
+    def __post_init__(self):
+        self.name = f"filter{self.pred}"
+
+    def _eval(self, pred, attrs, n) -> np.ndarray:
+        kind = pred[0]
+        if kind in ("and", "or"):
+            a = self._eval(pred[1], attrs, n)
+            b = self._eval(pred[2], attrs, n)
+            return (a & b) if kind == "and" else (a | b)
+        if kind == "eq":
+            _, field, val = pred
+            vocab = {"color": COLORS, "brand": BRANDS, "action": ACTIONS}
+            iv = vocab[field].index(val) if isinstance(val, str) else val
+            return np.asarray(attrs[field]) == iv
+        if kind == "ge":
+            _, field, val = pred
+            return np.asarray(attrs[field]) >= val
+        if kind == "prefix":
+            _, field, val = pred
+            chars = np.asarray(attrs[field])   # (B, PLATE_LEN)
+            want = [PLATE_CHARS.index(c) for c in val]
+            ok = np.ones(n, bool)
+            for i, w in enumerate(want):
+                ok &= chars[:, i] == w
+            return ok
+        raise ValueError(pred)
+
+    def process(self, batch: Batch) -> Batch:
+        n = len(batch["idx"])
+        if n == 0:
+            return batch
+        keep = self._eval(self.pred, batch["attrs"], n)
+        return _mask_batch(batch, keep)
+
+
+@dataclasses.dataclass
+class WindowAggOp(Op):
+    """Tumbling-window aggregation over extracted attrs.
+
+    kinds: top_color | top_brand | top_brand_color | count_distinct_plates |
+           repeated_plates | count_jumping | top_team | top3_actions
+    """
+
+    kind: str = "top_color"
+    window: int = 128            # frames per tumbling window (by index)
+
+    def __post_init__(self):
+        self.name = f"window[{self.kind},{self.window}]"
+        self._buf: List[Dict[str, Any]] = []
+        self._window_start = 0
+        self._results: List[Dict[str, Any]] = []
+        self._seen_plates: Dict[Tuple, int] = {}
+
+    def process(self, batch: Batch) -> Batch:
+        n = len(batch["idx"])
+        attrs = batch.get("attrs", {})
+        for i in range(n):
+            rec = {"idx": int(batch["idx"][i])}
+            for k, v in attrs.items():
+                rec[k] = np.asarray(v[i])
+            self._buf.append(rec)
+        out_results = []
+        # tumble on frame index (event time)
+        max_idx = int(batch["idx"][-1]) if n else None
+        while max_idx is not None and \
+                max_idx >= self._window_start + self.window:
+            w_end = self._window_start + self.window
+            in_win = [r for r in self._buf if r["idx"] < w_end]
+            self._buf = [r for r in self._buf if r["idx"] >= w_end]
+            out_results.append(self._aggregate(in_win,
+                                               self._window_start, w_end))
+            self._window_start = w_end
+        batch = dict(batch)
+        if out_results:
+            batch["window_results"] = batch.get("window_results", []) \
+                + out_results
+        return batch
+
+    def _aggregate(self, recs, w0, w1) -> Dict[str, Any]:
+        from collections import Counter
+
+        res: Dict[str, Any] = {"window": (w0, w1), "kind": self.kind,
+                               "n": len(recs)}
+        if self.kind in ("top_color", "top_brand", "top_brand_color"):
+            if self.kind != "top_brand":
+                c = Counter(int(r["color"]) for r in recs if "color" in r)
+                res["top_color"] = COLORS[c.most_common(1)[0][0]] if c else None
+            if self.kind != "top_color":
+                c = Counter(int(r["brand"]) for r in recs if "brand" in r)
+                res["top_brand"] = BRANDS[c.most_common(1)[0][0]] if c else None
+        elif self.kind == "count_distinct_plates":
+            plates = set(tuple(int(x) for x in r["plate"]) for r in recs
+                         if "plate" in r)
+            res["distinct_plates"] = len(plates)
+        elif self.kind == "repeated_plates":
+            c = Counter(tuple(int(x) for x in r["plate"]) for r in recs
+                        if "plate" in r)
+            res["repeated"] = ["".join(PLATE_CHARS[i] for i in p)
+                               for p, k in c.items() if k >= 2]
+        elif self.kind == "count_jumping":
+            res["total_jumping"] = sum(int(r.get("n_jumping", 0))
+                                       for r in recs)
+        elif self.kind == "top_team":
+            # offense proxy: most spike actions => attacking team majority
+            c = Counter(int(r["action"]) for r in recs if "action" in r)
+            res["spikes"] = c.get(ACTIONS.index("spike"), 0)
+        elif self.kind == "top3_actions":
+            c = Counter(int(r["action"]) for r in recs if "action" in r)
+            res["top3"] = [ACTIONS[a] for a, _ in c.most_common(3)]
+        return res
+
+    def snapshot(self):
+        return {"buf": list(self._buf), "window_start": self._window_start}
+
+    def restore(self, st):
+        self._buf = list(st["buf"])
+        self._window_start = st["window_start"]
+
+
+# ===========================================================================
+def _mask_batch(batch: Batch, keep: np.ndarray) -> Batch:
+    out = dict(batch)
+    out["frames"] = batch["frames"][keep]
+    out["idx"] = batch["idx"][keep]
+    if "attrs" in batch:
+        out["attrs"] = {k: np.asarray(v)[keep]
+                        for k, v in batch["attrs"].items()}
+    return out

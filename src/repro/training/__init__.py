@@ -1,0 +1,8 @@
+from repro.training.optimizer import (
+    adamw_init,
+    adamw_update,
+    OptimizerConfig,
+)
+from repro.training.trainer import Trainer, TrainConfig, make_train_step
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import TokenStream, DistillBatcher

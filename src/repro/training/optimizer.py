@@ -1,0 +1,148 @@
+"""AdamW with optional block-wise int8-quantized moments.
+
+The int8 moment compression (bitsandbytes-style, block size 256 with a f32
+absmax scale per block) cuts optimizer state from 8 B/param to ~2 B/param —
+this is what fits jamba-398B training on a single 256-chip pod (see
+DESIGN.md §4 and EXPERIMENTS.md §Dry-run memory table).
+
+State layout per param leaf:
+  fp32 moments:  {"m": f32[shape], "v": f32[shape]}
+  int8 moments:  {"m_q": i8[shape], "m_s": f32[nblocks],
+                  "v_q": i8[shape], "v_s": f32[nblocks]}
+plus a scalar step counter at the tree root.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantized_state: bool = False
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(np.pi * prog))
+    return cfg.lr * warm * cos
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization of moments
+# ---------------------------------------------------------------------------
+
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-last-axis-row linear symmetric int8 (signed first moment m).
+
+    Row-wise (not flat-block) scales keep the scale tensor sharded exactly
+    like the parameter's leading axes — no cross-shard blocks, no resharding
+    collectives inside the optimizer (crucial at 398B scale)."""
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def _dq8(q: jax.Array, s: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * s
+
+
+def _q8_v(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Nonlinear int8 for the second moment v (non-negative, huge dynamic
+    range): linear-quantize u = v**0.25.  A small v in a block with a large
+    max then keeps ~(1/127)^4 relative resolution in v-space instead of
+    collapsing to zero — which would blow up mhat/sqrt(vhat)."""
+    return _q8(jnp.sqrt(jnp.sqrt(jnp.maximum(x, 0.0))))
+
+
+def _dq8_v(q: jax.Array, s: jax.Array) -> jax.Array:
+    u = _dq8(q, s)
+    u2 = u * u
+    return u2 * u2
+
+
+# ---------------------------------------------------------------------------
+# init / update
+# ---------------------------------------------------------------------------
+
+def adamw_init(params: Any, cfg: OptimizerConfig) -> Dict[str, Any]:
+    def init_leaf(p):
+        if cfg.quantized_state and p.ndim >= 2:
+            srow = p.shape[:-1] + (1,)
+            return {
+                "m_q": jnp.zeros(p.shape, jnp.int8),
+                "m_s": jnp.zeros(srow, jnp.float32),
+                "v_q": jnp.zeros(p.shape, jnp.int8),
+                "v_s": jnp.zeros(srow, jnp.float32),
+            }
+        return {"m": jnp.zeros(p.shape, jnp.float32),
+                "v": jnp.zeros(p.shape, jnp.float32)}
+
+    moments = jax.tree_util.tree_map(init_leaf, params)
+    return {"moments": moments, "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(params: Any, grads: Any, state: Dict[str, Any],
+                 cfg: OptimizerConfig) -> Tuple[Any, Dict[str, Any],
+                                                Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    def upd(p, g, mom):
+        g = g.astype(jnp.float32) * scale
+        quant = cfg.quantized_state and p.ndim >= 2
+        if quant:
+            m = _dq8(mom["m_q"], mom["m_s"])
+            v = _dq8_v(mom["v_q"], mom["v_s"])
+        else:
+            m, v = mom["m"], mom["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if quant:
+            m_q, m_s = _q8(m)
+            v_q, v_s = _q8_v(v)
+            return new_p, {"m_q": m_q, "m_s": m_s, "v_q": v_q, "v_s": v_s}
+        return new_p, {"m": m, "v": v}
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = treedef.flatten_up_to(state["moments"])
+    out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_moments = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"moments": new_moments, "step": step}, metrics

@@ -1,0 +1,92 @@
+"""Dry-run spec construction tests (no 512-device compile — pure shapes).
+
+The actual lower+compile of all 40 cells × 2 meshes runs via
+``python -m repro.launch.dryrun --all --both-meshes`` (reports/dryrun/);
+these tests pin the *spec* layer: abstract inputs, shardings, rules.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding
+
+from repro.common.config import SHAPE_CELLS, applicable_cells
+from repro.common.sharding import mesh_scope, rules_scope
+from repro.configs import ASSIGNED, get_config
+from repro.launch.specs import cell_rules, cell_spec, quantized_opt
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(devs, ("data", "model"))
+
+
+def test_cell_rules_long_context():
+    cfg = get_config("jamba-1.5-large-398b")
+    rules = cell_rules(cfg, SHAPE_CELLS["long_500k"])
+    assert rules == {"batch": None, "kv_seq": ("data",)}
+    assert cell_rules(cfg, SHAPE_CELLS["train_4k"]) == {}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_cell_specs_build_for_all_cells(mesh22, arch):
+    """Every applicable (arch × shape) builds abstract args + shardings."""
+    cfg = get_config(arch)
+    with mesh_scope(mesh22):
+        for cell in applicable_cells(cfg):
+            spec = cell_spec(cfg, cell, mesh22)
+            assert spec.step_kind == SHAPE_CELLS[cell].kind
+            leaves = jax.tree_util.tree_leaves(spec.args)
+            assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+            shard_leaves = jax.tree_util.tree_leaves(
+                spec.in_shardings,
+                is_leaf=lambda x: isinstance(x, NamedSharding))
+            assert all(isinstance(s, NamedSharding) for s in shard_leaves)
+            # sharding tree must mirror the args tree leaf-for-leaf
+            assert len(shard_leaves) == len(leaves)
+
+
+def test_train_cell_has_optimizer_state_and_donation(mesh22):
+    cfg = get_config("gemma2-2b")
+    with mesh_scope(mesh22):
+        spec = cell_spec(cfg, "train_4k", mesh22)
+    params, opt_state, batch = spec.args
+    assert "moments" in opt_state and "step" in opt_state
+    assert spec.donate == (0, 1)
+    assert batch["tokens"].shape == (256, 4096)
+
+
+def test_decode_cell_shapes(mesh22):
+    cfg = get_config("phi3-mini-3.8b")
+    with mesh_scope(mesh22):
+        spec = cell_spec(cfg, "decode_32k", mesh22)
+    params, tokens, cache, cur = spec.args
+    assert tokens.shape == (128, 1)
+    k_leaf = cache["layers"]["i0"]["k"]
+    assert k_leaf.shape == (32, 128, 32768, 32, 96)  # (L, B, S, Hkv, D)
+    assert spec.donate == (2,)
+
+
+def test_quantized_opt_selection():
+    assert quantized_opt(get_config("jamba-1.5-large-398b"))
+    assert quantized_opt(get_config("qwen3-moe-235b-a22b"))
+    assert not quantized_opt(get_config("gemma2-2b"))
+    assert not quantized_opt(get_config("mamba2-130m"))
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+
+    hlo = """
+  %ag = f32[8,128]{1,0} all-gather(f32[1,128]{1,0} %p), dimensions={0}
+  %ar.1 = bf16[256]{0} all-reduce(bf16[256]{0} %x), to_apply=%sum
+  %cp = f32[4,4]{1,0} collective-permute(f32[4,4]{1,0} %y)
+  %other = f32[2,2]{1,0} add(f32[2,2]{1,0} %a, f32[2,2]{1,0} %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 1 * 128 * 4
+    assert out["all-reduce"] == 256 * 2
+    assert out["collective-permute"] == 16 * 4
+    assert out["total"] == out["all-gather"] + out["all-reduce"] + \
+        out["collective-permute"]

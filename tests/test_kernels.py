@@ -1,0 +1,207 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.int8_matmul.ops import int8_matmul, matmul_int8_dynamic
+from repro.kernels.int8_matmul.ref import (
+    int8_matmul_ref, quantize_colwise, quantize_rowwise)
+from repro.kernels.ssd_scan.ops import ssd
+from repro.models.ssm import _ssd_chunked
+from repro.kernels.fused_preprocess.ops import fused_preprocess
+from repro.kernels.fused_preprocess.ref import fused_preprocess_ref
+from repro.kernels.frame_diff.ops import frame_diff
+from repro.kernels.frame_diff.ref import frame_diff_ref
+
+
+def rnd(i, shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jax.random.normal(jax.random.PRNGKey(i), shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hk,g,s,d", [
+    (1, 1, 1, 64, 32),
+    (2, 2, 2, 128, 32),
+    (1, 2, 4, 256, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["causal", "softcap", "window", "bidir"])
+def test_flash_attention_sweep(b, hk, g, s, d, dtype, mode):
+    q = rnd(0, (b, hk, g, s, d), dtype)
+    k = rnd(1, (b, hk, s, d), dtype)
+    v = rnd(2, (b, hk, s, d), dtype)
+    kw = dict(causal=True)
+    if mode == "softcap":
+        kw["cap"] = 20.0
+    elif mode == "window":
+        kw["window"] = s // 4
+    elif mode == "bidir":
+        kw = dict(causal=False)
+    out = flash_attention_kernel(q, k, v, bq=32, bk=32, interpret=True, **kw)
+    ref = flash_attention_ref(q, k, v, **kw)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_model_layout():
+    b, s, h, hk, d = 2, 128, 8, 2, 32
+    q, k, v = rnd(0, (b, s, h, d)), rnd(1, (b, s, hk, d)), rnd(2, (b, s, hk, d))
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    g = h // hk
+    ref = flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b, hk, g, s, d),
+        k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), causal=True)
+    ref = ref.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,hk,d,nsplit", [
+    (2, 256, 4, 2, 32, 4),
+    (1, 512, 8, 8, 64, 8),
+    (3, 128, 4, 1, 32, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, s, h, hk, d, nsplit, dtype):
+    q = rnd(0, (b, 1, h, d), dtype)
+    k = rnd(1, (b, s, hk, d), dtype)
+    v = rnd(2, (b, s, hk, d), dtype)
+    kv_len = jnp.asarray(
+        np.random.RandomState(0).randint(1, s + 1, (b, 1)), jnp.int32)
+    out = decode_attention(q, k, v, kv_len, nsplit=nsplit, interpret=True)
+    g = h // hk
+    ref = decode_attention_ref(q[:, 0].reshape(b, hk, g, d), k, v, kv_len)
+    ref = ref.reshape(b, 1, h, d)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_decode_attention_window():
+    b, s, h, hk, d = 2, 256, 4, 2, 32
+    q, k, v = rnd(0, (b, 1, h, d)), rnd(1, (b, s, hk, d)), rnd(2, (b, s, hk, d))
+    kv_len = jnp.asarray([[200], [256]], jnp.int32)
+    out = decode_attention(q, k, v, kv_len, window=64, interpret=True)
+    g = h // hk
+    ref = decode_attention_ref(q[:, 0].reshape(b, hk, g, d), k, v, kv_len,
+                               window=64).reshape(b, 1, h, d)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (256, 512, 256),
+                                   (64, 128, 512)])
+def test_int8_matmul_sweep(m, k, n):
+    x = rnd(0, (m, k))
+    w = rnd(1, (k, n))
+    xq, sx = quantize_rowwise(x)
+    wq, sw = quantize_colwise(w)
+    out = int8_matmul(xq, wq, sx, sw, interpret=True)
+    ref = int8_matmul_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+    # quantization error against fp32 ground truth stays bounded
+    rel = float(jnp.max(jnp.abs(out - x @ w)) / jnp.max(jnp.abs(x @ w)))
+    assert rel < 0.05
+
+
+def test_int8_dynamic_quant():
+    x = rnd(0, (64, 128))
+    w = rnd(1, (128, 256))
+    wq, sw = quantize_colwise(w)
+    out = matmul_int8_dynamic(x, wq, sw, interpret=True)
+    rel = float(jnp.max(jnp.abs(out - x @ w)) / jnp.max(jnp.abs(x @ w)))
+    assert rel < 0.05
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,l,h,p,g,n,q", [
+    (2, 128, 4, 16, 2, 8, 32),
+    (1, 64, 2, 32, 1, 16, 16),
+    (2, 256, 8, 16, 4, 8, 64),
+])
+def test_ssd_kernel_vs_model(b, l, h, p, g, n, q):
+    x = rnd(0, (b, l, h, p))
+    dt = jax.nn.softplus(rnd(1, (b, l, h)))
+    a = -jnp.exp(rnd(2, (h,), scale=0.2))
+    bm = rnd(3, (b, l, g, n), scale=0.3)
+    cm = rnd(4, (b, l, g, n), scale=0.3)
+    d = jnp.ones((h,))
+    y0, s0 = _ssd_chunked(x, dt, a, bm, cm, d, q)
+    y1, s1 = ssd(x, dt, a, bm, cm, d, chunk=q, interpret=True)
+    np.testing.assert_allclose(y1, y0, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(s1, s0, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_matches_sequential_recurrence():
+    b, l, h, p, g, n, q = 1, 64, 2, 8, 1, 4, 16
+    x = rnd(0, (b, l, h, p))
+    dt = jax.nn.softplus(rnd(1, (b, l, h)))
+    a = -jnp.exp(rnd(2, (h,), scale=0.2))
+    bm, cm = rnd(3, (b, l, g, n), scale=0.3), rnd(4, (b, l, g, n), scale=0.3)
+    d = jnp.ones((h,))
+    y, _ = ssd(x, dt, a, bm, cm, d, chunk=q, interpret=True)
+    xs, dts, As = map(np.asarray, (x, dt, a))
+    Bh = np.repeat(np.asarray(bm), h // g, 2)
+    Ch = np.repeat(np.asarray(cm), h // g, 2)
+    st = np.zeros((b, h, n, p))
+    ys = np.zeros((b, l, h, p))
+    for t in range(l):
+        dA = np.exp(dts[:, t] * As)
+        st = dA[:, :, None, None] * st + (
+            dts[:, t][:, :, None, None] * Bh[:, t][:, :, :, None]
+            * xs[:, t][:, :, None, :])
+        ys[:, t] = np.einsum("bhn,bhnp->bhp", Ch[:, t], st) + xs[:, t]
+    np.testing.assert_allclose(np.asarray(y), ys, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused preprocess / frame diff
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("crop,factor,grey", [
+    ((0, 0, 128, 256), 1, False),
+    ((0, 0, 128, 256), 2, False),
+    ((32, 128, 64, 128), 2, True),
+    ((96, 0, 32, 256), 4, False),
+])
+def test_fused_preprocess_sweep(crop, factor, grey):
+    f = jax.random.randint(jax.random.PRNGKey(2), (2, 3, 128, 256), 0, 256,
+                           jnp.uint8)
+    out = fused_preprocess(f, crop=crop, factor=factor, grey=grey,
+                           interpret=True)
+    ref = fused_preprocess_ref(f, crop=crop, factor=factor, grey=grey)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("regions", [(1, 1), (4, 4), (4, 8)])
+def test_frame_diff_sweep(regions):
+    f = jax.random.randint(jax.random.PRNGKey(2), (2, 3, 128, 256), 0, 256,
+                           jnp.uint8)
+    p = jax.random.randint(jax.random.PRNGKey(3), (2, 3, 128, 256), 0, 256,
+                           jnp.uint8)
+    out = frame_diff(f, p, regions=regions, interpret=True)
+    ref = frame_diff_ref(f, p, regions=regions)
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+    # identical frames diff to zero
+    z = frame_diff(f, f, regions=regions, interpret=True)
+    np.testing.assert_allclose(z, np.zeros_like(z), atol=1e-7)

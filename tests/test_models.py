@@ -1,0 +1,163 @@
+"""Model zoo tests: smoke configs for all 10 assigned archs, decode parity,
+sharded-vs-single numerical parity, gradient flow."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config, smoke_config
+from repro.models import LM, materialize
+from repro.models.param import axes_tree
+from repro.common.config import applicable_cells, SHAPE_CELLS
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key=1):
+    tokens = jax.random.randint(jax.random.PRNGKey(key), (B, S), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend == "audio":
+        batch["frames"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(key + 1), (B, 16, cfg.d_model))
+    if cfg.frontend == "patch":
+        batch["patch_embeds"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(key + 1), (B, 4, cfg.d_model))
+        batch["patch_pos"] = jnp.arange(4)[None, :].repeat(B, 0)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward_loss_shapes_no_nans(arch):
+    """Per-arch smoke test: reduced config, one forward/train step on CPU."""
+    cfg = smoke_config(arch)
+    lm = LM(cfg, tp=1, q_block=16)
+    params = materialize(lm.spec(), jax.random.PRNGKey(0), jnp.float32)
+    batch = make_batch(cfg)
+    logits, aux = lm.logits_causal(params, batch, jnp.float32)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss = jax.jit(lm.loss)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    # one train (grad) step must produce finite grads
+    grads = jax.grad(lambda p: lm.loss(p, batch, jnp.float32))(params)
+    gn = jax.tree_util.tree_reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g)), grads, 0.0)
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", ["chatglm3-6b", "gemma2-2b", "mamba2-130m",
+                                  "jamba-1.5-large-398b",
+                                  "seamless-m4t-medium", "pixtral-12b"])
+def test_decode_matches_causal(arch):
+    """Prefill+decode continuation == full causal forward (fp32 exact)."""
+    cfg = smoke_config(arch)
+    if cfg.has_moe:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=16.0))
+    lm = LM(cfg, tp=1, q_block=16)
+    params = materialize(lm.spec(), jax.random.PRNGKey(0), jnp.float32)
+    batch = make_batch(cfg)
+    tokens = batch["tokens"]
+    logits_full, _ = lm.logits_causal(params, batch, jnp.float32)
+    P = S - 4
+    pb = dict(batch)
+    pb["tokens"] = tokens[:, :P]
+    cache = lm.init_cache(B, S, t_src=16, dtype=jnp.float32)
+    lg, cache = lm.prefill(params, pb, cache, dtype=jnp.float32)
+    np.testing.assert_allclose(lg[:, 0], logits_full[:, P - 1], atol=2e-3,
+                               rtol=1e-3)
+    for t in range(3):
+        lg, cache = lm.decode(params, tokens[:, P + t:P + t + 1], cache,
+                              jnp.int32(P + t), dtype=jnp.float32)
+        np.testing.assert_allclose(lg[:, 0], logits_full[:, P + t],
+                                   atol=2e-3, rtol=1e-3)
+
+
+def test_moe_capacity_drops_are_only_divergence():
+    """With huge capacity, MoE prefill/decode is exact vs causal."""
+    cfg = smoke_config("qwen3-moe-235b-a22b")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    lm = LM(cfg, tp=1, q_block=16)
+    params = materialize(lm.spec(), jax.random.PRNGKey(0), jnp.float32)
+    batch = make_batch(cfg)
+    logits_full, _ = lm.logits_causal(params, batch, jnp.float32)
+    cache = lm.init_cache(B, S, dtype=jnp.float32)
+    pb = dict(batch)
+    pb["tokens"] = batch["tokens"][:, :S - 1]
+    lg, cache = lm.prefill(params, pb, cache, dtype=jnp.float32)
+    np.testing.assert_allclose(lg[:, 0], logits_full[:, S - 2], atol=2e-3,
+                               rtol=1e-3)
+
+
+def test_applicable_cells_long_context_rule():
+    """long_500k only for sub-quadratic archs; decode cells for all."""
+    subq = {a for a in ASSIGNED
+            if "long_500k" in applicable_cells(get_config(a))}
+    assert subq == {"jamba-1.5-large-398b", "mamba2-130m"}
+    for a in ASSIGNED:
+        cells = applicable_cells(get_config(a))
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(cells)
+
+
+def test_full_configs_match_assignment():
+    """Exact config numbers from the assignment sheet."""
+    c = get_config("qwen3-moe-235b-a22b")
+    assert (c.n_layers, c.d_model, c.attention.n_heads,
+            c.attention.n_kv_heads, c.vocab_size) == (94, 4096, 64, 4, 151936)
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.d_ff_expert) == (128, 8, 1536)
+    c = get_config("jamba-1.5-large-398b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == (
+        72, 8192, 24576, 65536)
+    assert (c.moe.n_experts, c.moe.top_k) == (16, 2)
+    assert c.block_pattern.count("attn+moe") == 1 and len(c.block_pattern) == 8
+    c = get_config("gemma2-2b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.attention.window,
+            c.attention.softcap, c.final_softcap) == (26, 2304, 9216, 4096,
+                                                      50.0, 30.0)
+    c = get_config("mamba2-130m")
+    assert (c.n_layers, c.d_model, c.ssm.d_state) == (24, 768, 128)
+    c = get_config("seamless-m4t-medium")
+    assert c.encoder_decoder and c.n_encoder_layers == 12
+    c = get_config("phi3-mini-3.8b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == (32, 3072, 8192,
+                                                             32064)
+    c = get_config("moonshot-v1-16b-a3b")
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.d_ff_expert) == (64, 6, 1408)
+    c = get_config("chatglm3-6b")
+    assert (c.attention.n_kv_heads, c.attention.rotary_pct) == (2, 0.5)
+    c = get_config("glm4-9b")
+    assert (c.n_layers, c.vocab_size) == (40, 151552)
+    c = get_config("pixtral-12b")
+    assert (c.n_layers, c.d_model, c.d_ff) == (40, 5120, 14336)
+
+
+def test_vocab_padding_divisible_by_model_axis():
+    for a in ASSIGNED:
+        assert get_config(a).padded_vocab % 16 == 0
+
+
+def test_param_counts_in_expected_range():
+    """Config param totals should land near the advertised sizes."""
+    import repro.models.model as mm
+
+    expect = {
+        "qwen3-moe-235b-a22b": (200e9, 280e9),
+        "jamba-1.5-large-398b": (330e9, 430e9),
+        # NOTE: the assignment sheet's numbers (48L x 64e x d_ff 1408, all
+        # layers MoE) arithmetically give ~28.5B total / ~3.3B active; the
+        # family name says 16B (the HF model interleaves dense layers /
+        # fewer routed experts). We implement the sheet's numbers exactly.
+        "moonshot-v1-16b-a3b": (24e9, 32e9),
+        "gemma2-2b": (2e9, 3.5e9),
+        "phi3-mini-3.8b": (3e9, 4.5e9),
+        "glm4-9b": (8e9, 11e9),
+        "chatglm3-6b": (5.5e9, 7.5e9),
+        "pixtral-12b": (11e9, 14e9),
+        "mamba2-130m": (0.1e9, 0.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = mm.param_count_estimate(get_config(arch))
+        assert lo <= n <= hi, (arch, n)

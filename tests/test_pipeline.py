@@ -1,0 +1,51 @@
+"""GPipe pipeline-parallelism test (multi-device CPU).
+
+Needs >1 host device; running this file spawns a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=4 so the main pytest
+process keeps its single-device view (per the dry-run brief).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.distribution import gpipe, PipelineConfig
+devs = np.asarray(jax.devices()).reshape(4)
+mesh = Mesh(devs, ('pod',))
+W = jax.random.normal(jax.random.PRNGKey(0), (4, 16, 16)) * 0.3
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+pipe = gpipe(stage_fn, mesh, PipelineConfig(axis='pod', microbatches=4))
+y = pipe(W, x)
+ref = x
+for i in range(4):
+    ref = jnp.tanh(ref @ W[i])
+err = float(jnp.max(jnp.abs(y - ref)))
+assert err < 1e-6, err
+print('PIPE_OK', err)
+"""
+
+
+def test_gpipe_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "PIPE_OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_bubble_fraction():
+    from repro.distribution import PipelineConfig
+
+    assert PipelineConfig(microbatches=4).bubble_fraction(2) == pytest.approx(
+        1 / 5)
+    assert PipelineConfig(microbatches=8).bubble_fraction(2) == pytest.approx(
+        1 / 9)

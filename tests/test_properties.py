@@ -1,0 +1,118 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.common.sharding import (DEFAULT_RULES, logical_to_mesh,
+                                   rules_scope)
+from repro.common.utils import ceil_div, pad_to_multiple
+from repro.kernels.int8_matmul.ref import (int8_matmul_ref, quantize_colwise,
+                                           quantize_rowwise)
+from repro.models.attention import head_layout
+from repro.common.config import AttentionConfig
+from repro.streaming.operators import FilterOp, WindowAggOp, _mask_batch
+from repro.training.optimizer import _dq8, _dq8_v, _q8, _q8_v
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+@given(st.integers(1, 10_000), st.integers(1, 512))
+@settings(**SETTINGS)
+def test_pad_to_multiple_props(x, m):
+    p = pad_to_multiple(x, m)
+    assert p % m == 0 and p >= x and p - x < m
+    assert ceil_div(x, m) * m == p
+
+
+@given(st.integers(1, 128), st.integers(1, 64), st.sampled_from([1, 2, 4, 8,
+                                                                 16]))
+@settings(**SETTINGS)
+def test_head_layout_invariants(h, kv, tp):
+    """TP head layout: padded q heads divide tp; kv map is grouping-valid."""
+    kv = min(kv, h)
+    att = AttentionConfig(n_heads=h, n_kv_heads=kv, head_dim=16)
+    hq_p, hkv_e, kv_map = head_layout(att, tp)
+    assert hq_p % tp == 0 and hq_p >= h
+    assert hkv_e % tp == 0 or hkv_e == att.n_kv_heads
+    assert hq_p % hkv_e == 0                  # even GQA grouping
+    assert len(kv_map) == hkv_e
+    assert kv_map.min() >= 0 and kv_map.max() < kv
+    assert np.all(np.diff(kv_map) >= 0)       # monotone replication
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_int8_moment_quant_bounds(seed):
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (8, 64)))
+    q, s = _q8(jnp.asarray(x))
+    back = np.asarray(_dq8(q, s))
+    rowmax = np.abs(x).max(-1, keepdims=True) + 1e-12
+    assert np.all(np.abs(back - x) <= rowmax / 127 + 1e-6)
+    # v-path: non-negative in, non-negative out
+    v = x * x
+    vq, vs = _q8_v(jnp.asarray(v))
+    assert np.all(np.asarray(_dq8_v(vq, vs)) >= 0)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(8, 64), st.integers(8, 64))
+@settings(max_examples=10, deadline=None)
+def test_int8_matmul_error_bound(seed, m, k):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, 16))
+    xq, sx = quantize_rowwise(x)
+    wq, sw = quantize_colwise(w)
+    out = np.asarray(int8_matmul_ref(xq, wq, sx, sw))
+    ref = np.asarray(x @ w)
+    # per-element error bound: |e| <= (|x| row-areas) * quant steps
+    denom = np.abs(ref).max() + 1e-6
+    assert np.abs(out - ref).max() / denom < 0.08
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=32))
+@settings(**SETTINGS)
+def test_mask_batch_preserves_order_and_alignment(keeps):
+    n = len(keeps)
+    batch = {"frames": np.arange(n * 4).reshape(n, 4).astype(np.uint8),
+             "idx": np.arange(n),
+             "attrs": {"color": np.arange(n)}}
+    out = _mask_batch(batch, np.asarray(keeps))
+    kept = [i for i, k in enumerate(keeps) if k]
+    assert list(out["idx"]) == kept
+    assert list(out["attrs"]["color"]) == kept
+    np.testing.assert_array_equal(out["frames"][:, 0],
+                                  np.asarray(kept) * 4)
+
+
+@given(st.integers(1, 200), st.integers(8, 64))
+@settings(**SETTINGS)
+def test_window_agg_tumbles_exactly(n, window):
+    """Every closed window covers exactly `window` indices, no gaps."""
+    op = WindowAggOp(kind="top_color", window=window)
+    batch = {"frames": np.zeros((n, 1, 1, 1)), "idx": np.arange(n),
+             "attrs": {"color": np.zeros(n, np.int64)}}
+    out = op.process(batch)
+    results = out.get("window_results", [])
+    for i, r in enumerate(results):
+        assert r["window"] == (i * window, (i + 1) * window)
+    # windows closed = floor of the max index over the window size
+    assert len(results) == max(0, (n - 1)) // window
+
+
+@given(st.sampled_from(["batch", "vocab", "heads", "mlp", "experts"]),
+       st.booleans())
+@settings(**SETTINGS)
+def test_logical_rules_never_reference_missing_axes(axis, multipod):
+    """PartitionSpecs only name axes that exist in the mesh."""
+    import jax as _jax
+    from jax.sharding import Mesh
+
+    devs = np.asarray(_jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    spec = logical_to_mesh((axis,), mesh)
+    for entry in spec:
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        assert all(nm in mesh.axis_names for nm in names)

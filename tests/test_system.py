@@ -1,0 +1,106 @@
+"""End-to-end behaviour tests for the Saṃsāra system.
+
+Uses tiny (non-cached) models so the suite stays CPU-fast; the full-quality
+numbers live in benchmarks/ (reports/samsara_bench.log).
+"""
+import numpy as np
+import pytest
+
+from repro.core.superopt import SuperOptimizer
+from repro.data import TollBoothStream, VolleyballStream
+from repro.queries import get_query
+from repro.streaming.operators import MLLMExtractOp, SkipOp
+from repro.streaming.pretrain import train_stream_models
+from repro.streaming.runtime import StreamRuntime
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    # tiny training: enough for the plumbing; accuracy is benchmarks' job
+    return train_stream_models(steps_mllm=40, steps_small=20, steps_det=30,
+                               cache_dir=None, verbose=False)
+
+
+def test_naive_plan_runs_and_extracts(ctx):
+    q = get_query("Q2")
+    rt = StreamRuntime(q.naive_plan(), ctx, micro_batch=8)
+    res = rt.run(TollBoothStream(seed=11), 64)
+    assert res.n_frames == 64
+    assert res.mllm_frames == 64          # naive: every frame through MLLM
+    assert res.fps > 0
+    assert all("color" in o for o in res.outputs)
+
+
+def test_superoptimizer_reduces_mllm_load(ctx):
+    q = get_query("Q8")
+    sf = lambda seed: TollBoothStream(seed=seed)  # noqa: E731
+    opt = SuperOptimizer(ctx, val_frames=64)
+    plan, report = opt.optimize(q, sf, phases=("semantic",))
+    naive = StreamRuntime(q.naive_plan(), ctx).run(sf(99), 128)
+    optim = StreamRuntime(plan, ctx).run(sf(99), 128)
+    # The invariant is MLLM-load reduction; wall FPS only wins when the
+    # extractor is expensive (this fixture's 40-step model is toy-cheap —
+    # the real comparison lives in benchmarks/samsara_bench).
+    assert optim.mllm_frames < naive.mllm_frames
+    # report artifacts exist
+    assert report.phases[0]["knowledge"]
+    assert any("SELECT Skip" in l for l in report.phases[0]["selection_log"])
+
+
+def test_all_phases_produce_valid_plans(ctx):
+    q = get_query("Q6")
+    sf = lambda seed: TollBoothStream(seed=seed)  # noqa: E731
+    opt = SuperOptimizer(ctx, val_frames=64)
+    plan, report = opt.optimize(q, sf)
+    assert plan.index_of(MLLMExtractOp) is not None
+    # Q6 needs color -> greyscale must NOT appear
+    assert "greyscale" not in plan.describe()
+    res = StreamRuntime(plan, ctx).run(sf(5), 128)
+    acc = q.evaluate(res)
+    assert 0.0 <= acc <= 1.0
+
+
+def test_volleyball_query_runs(ctx):
+    q = get_query("Q13")
+    rt = StreamRuntime(q.naive_plan(), ctx, micro_batch=8)
+    res = rt.run(VolleyballStream(seed=3), 300)
+    assert res.window_results, "tumbling windows must close"
+    assert all(w["kind"] == "top3_actions" for w in res.window_results)
+
+
+def test_streaming_snapshot_restore(ctx):
+    """Aligned checkpoint: snapshot mid-stream, restore, results identical."""
+    q = get_query("Q2")
+    sf = lambda: TollBoothStream(seed=21)  # noqa: E731
+    opt_plan = q.naive_plan()
+    opt_plan.insert_after_source(SkipOp(amount=3))
+    rt = StreamRuntime(opt_plan, ctx, micro_batch=8)
+    stream = sf()
+    r1 = rt.run(stream, 64, warmup=0)
+    snap = rt.snapshot()
+    r2 = rt.run(stream, 64, warmup=0)
+
+    # recover: fresh runtime, restore snapshot, replay from source offset
+    plan2 = q.naive_plan()
+    plan2.insert_after_source(SkipOp(amount=3))
+    rt2 = StreamRuntime(plan2, ctx, micro_batch=8)
+    rt2.restore(snap)
+    stream2 = sf()
+    stream2.batch(64)                      # replay source to offset 64
+    r3 = rt2.run(stream2, 64, warmup=0)
+    assert [o["idx"] for o in r2.outputs] == [o["idx"] for o in r3.outputs]
+
+
+def test_adaptive_model_switching(ctx):
+    op = MLLMExtractOp(tasks=("present", "color"), model="adaptive")
+    op.open(ctx)
+    frames = TollBoothStream(seed=2).batch(16)[0]
+    batch = {"frames": frames.astype(np.float32) / 255.0 - 0.5,
+             "idx": np.arange(16)}
+    out = op.process(batch)
+    assert "color" in out["attrs"]
+    # low density -> pruned branch taken without error
+    small = {"frames": batch["frames"][:2], "idx": np.arange(2)}
+    for _ in range(6):
+        op.process(small)
+    assert op._density_ema < 0.35
