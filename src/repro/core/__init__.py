@@ -2,3 +2,4 @@ from repro.core.semantic import SceneKnowledge, SemanticOptimizer
 from repro.core.logical import LogicalOptimizer
 from repro.core.physical import PhysicalOptimizer, structured_prune
 from repro.core.superopt import SuperOptimizer, OptimizationReport
+from repro.core.multiquery import SharedExecution, factor_plans

@@ -94,7 +94,21 @@ def _windows(labels: List[Dict], window: int) -> List[List[Dict]]:
 
 
 def _window_results(result, kind: str) -> List[Dict]:
-    return [w for w in result.window_results if w["kind"] == kind]
+    """Window results of one kind, one per window span.
+
+    flush() emits the open window early, marked ``partial``; when a
+    segmented (snapshot/resume) run later closes the same window, the
+    closed result supersedes the partial one (and a fresher partial
+    supersedes a staler one), so positional indexing against ground-truth
+    windows stays aligned."""
+    best: Dict[Tuple, Dict] = {}      # insertion-ordered by window span
+    for w in result.window_results:
+        if w["kind"] != kind:
+            continue
+        key = tuple(w["window"])
+        if key not in best or best[key].get("partial"):
+            best[key] = w
+    return list(best.values())
 
 
 def _event_f1(pred_events: List[int], true_spans: List[Tuple[int, int]],

@@ -17,3 +17,4 @@ from repro.streaming.operators import (
 )
 from repro.streaming.plan import Plan
 from repro.streaming.runtime import StreamRuntime, RunResult
+from repro.streaming.multiquery import MultiQueryRuntime, MultiQueryResult

@@ -1,0 +1,212 @@
+"""Multi-query shared-execution runtime.
+
+``MultiQueryRuntime`` serves N concurrent queries over one stream with one
+pass over the frames: the planner (``repro.core.multiquery.factor_plans``)
+factors the plans' longest common operator prefix — including a single
+union-task MLLM extract — and the runtime pushes each micro-batch through
+that prefix once, then fans the annotated batch out to the per-query
+relational tails (Filter / WindowAgg / Sink).
+
+Results are reported *per query* as ordinary ``RunResult``s (so the catalog
+evaluators score each query exactly as if it ran alone), plus aggregate
+throughput and the total MLLM frame count — the sharing claim is
+``mllm_frames(shared) < sum_q mllm_frames(independent_q)`` with per-query
+outputs bitwise identical.
+
+Fault tolerance mirrors ``StreamRuntime``: an aligned snapshot captures the
+source offset + every prefix and tail operator's state, and the first
+``run()`` after ``restore()`` suppresses the warmup reset so the restored
+operator graph survives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List
+
+from repro.streaming.operators import (
+    Batch,
+    MLLMExtractOp,
+    Op,
+    OpContext,
+    SinkOp,
+)
+from repro.streaming.plan import Plan
+from repro.streaming.runtime import (
+    RunResult,
+    drive_stream,
+    flush_ops,
+    warmup_ops,
+)
+
+
+@dataclasses.dataclass
+class MultiQueryResult:
+    #: aggregate throughput in query-frames/s (n_queries * n_frames / wall)
+    fps: float
+    wall_s: float
+    n_frames: int
+    n_queries: int
+    #: frames through MLLM extracts this run (shared prefix counted once)
+    mllm_frames: int
+    shared_plan: str
+    #: per-query RunResults score exactly as standalone runs; their wall_s
+    #: is the shared wall *amortized* over the queries (so per-query walls
+    #: sum to the true shared wall, and per-query fps is the effective
+    #: throughput each query experiences under sharing)
+    per_query: Dict[str, RunResult]
+
+
+class MultiQueryRuntime:
+    def __init__(self, plans: List[Plan], ctx: OpContext,
+                 micro_batch: int = 16):
+        # local import: repro.core pulls in the whole optimizer stack
+        from repro.core.multiquery import factor_plans
+
+        self.shared = factor_plans(plans)
+        self.ctx = dataclasses.replace(ctx, micro_batch=micro_batch)
+        self.micro_batch = micro_batch
+        for op in self._all_ops():
+            op.open(self.ctx)
+        for tail in self.shared.tails:
+            assert isinstance(tail[-1], SinkOp), "tails must end in a Sink"
+        self._source_index = 0
+        self._restored = False
+
+    def _all_ops(self) -> List[Op]:
+        ops = list(self.shared.prefix)
+        for tail in self.shared.tails:
+            ops.extend(tail)
+        return ops
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "source_index": self._source_index,
+            "prefix": [op.snapshot() for op in self.shared.prefix],
+            "tails": [[op.snapshot() for op in tail]
+                      for tail in self.shared.tails],
+        }
+
+    def restore(self, st: Dict[str, Any]) -> None:
+        self._source_index = st["source_index"]
+        for op, s in zip(self.shared.prefix, st["prefix"]):
+            op.restore(s)
+        for tail, states in zip(self.shared.tails, st["tails"]):
+            for op, s in zip(tail, states):
+                op.restore(s)
+        # the next run() must not warmup-reset the restored state
+        self._restored = True
+
+    # ------------------------------------------------------------------
+    def _fan_out(self, batch: Batch, counts: List[Dict[str, int]],
+                 windows: List[List[Dict[str, Any]]]) -> None:
+        for qi, tail in enumerate(self.shared.tails):
+            b = batch
+            for op in tail:
+                counts[qi][op.name] += len(b["idx"])
+                b = op.process(b)
+                if "window_results" in b:
+                    windows[qi].extend(b.pop("window_results"))
+
+    def _advance(self, batch: Batch, pcounts: Dict[str, int],
+                 counts: List[Dict[str, int]],
+                 windows: List[List[Dict[str, Any]]]) -> None:
+        for op in self.shared.prefix:
+            pcounts[op.name] += len(batch["idx"])
+            batch = op.process(batch)
+            if "window_results" in batch:
+                # a window op shared by every query: results belong to all
+                wr = batch.pop("window_results")
+                for w in windows:
+                    w.extend(wr)
+        self._fan_out(batch, counts, windows)
+
+    def _flush(self, counts: List[Dict[str, int]],
+               windows: List[List[Dict[str, Any]]]) -> None:
+        def emit_all(wr):
+            # a shared window op's results belong to every query
+            for w in windows:
+                w.extend(wr)
+
+        flush_ops(self.shared.prefix, emit_all,
+                  terminal=lambda b: self._fan_out(b, counts, windows))
+        for qi, tail in enumerate(self.shared.tails):
+            flush_ops(tail, windows[qi].extend)
+
+    # ------------------------------------------------------------------
+    def run(self, stream, n_frames: int, warmup: int = 1,
+            flush: bool = True) -> MultiQueryResult:
+        sinks = [tail[-1] for tail in self.shared.tails]
+        for sink in sinks:
+            sink.collected = []
+        pcounts: Dict[str, int] = {op.name: 0 for op in self.shared.prefix}
+        counts: List[Dict[str, int]] = [
+            {op.name: 0 for op in tail} for tail in self.shared.tails]
+        windows: List[List[Dict[str, Any]]] = [[] for _ in self.shared.tails]
+        labels_all: List[Dict[str, Any]] = []
+
+        if warmup and not self._restored:
+            # throwaway accumulators; SinkOp.reset() drops warmup records
+            warmup_ops(
+                stream, self.micro_batch,
+                lambda b: self._advance(b, dict(pcounts),
+                                        [dict(c) for c in counts],
+                                        [[] for _ in windows]),
+                self._all_ops())
+            self._source_index = 0
+        self._restored = False
+        # per-run (not lifetime) model load, as in StreamRuntime.run
+        prefix_mllm_start = sum(
+            op.frames_processed for op in self.shared.prefix
+            if isinstance(op, MLLMExtractOp))
+        tail_mllm_start = [
+            sum(op.frames_processed for op in tail
+                if isinstance(op, MLLMExtractOp))
+            for tail in self.shared.tails]
+
+        def advance(batch):
+            # per-micro-batch checkpoint offset, as in StreamRuntime.run
+            self._source_index = int(batch["idx"][-1]) + 1
+            self._advance(batch, pcounts, counts, windows)
+
+        t0 = time.perf_counter()
+        drive_stream(stream, n_frames, self.micro_batch,
+                     self._source_index, advance, labels_all)
+        if flush:
+            self._flush(counts, windows)
+        wall = time.perf_counter() - t0
+
+        n_q = len(self.shared.tails)
+        prefix_mllm = sum(op.frames_processed for op in self.shared.prefix
+                          if isinstance(op, MLLMExtractOp)) \
+            - prefix_mllm_start
+        per_query: Dict[str, RunResult] = {}
+        total_mllm = prefix_mllm
+        for qi, (qid, tail) in enumerate(zip(self.shared.queries,
+                                             self.shared.tails)):
+            tail_mllm = sum(op.frames_processed for op in tail
+                            if isinstance(op, MLLMExtractOp)) \
+                - tail_mllm_start[qi]
+            total_mllm += tail_mllm
+            q_counts = dict(pcounts)
+            q_counts.update(counts[qi])
+            per_query[qid] = RunResult(
+                fps=n_frames * n_q / wall,
+                wall_s=wall / n_q,
+                n_frames=n_frames,
+                outputs=sinks[qi].collected,
+                window_results=windows[qi],
+                op_input_counts=q_counts,
+                mllm_frames=prefix_mllm + tail_mllm,
+                labels=labels_all,
+            )
+        return MultiQueryResult(
+            fps=len(self.shared.tails) * n_frames / wall,
+            wall_s=wall,
+            n_frames=n_frames,
+            n_queries=len(self.shared.tails),
+            mllm_frames=total_mllm,
+            shared_plan=self.shared.describe(),
+            per_query=per_query,
+        )

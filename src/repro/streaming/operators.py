@@ -56,6 +56,27 @@ class Op:
     def process(self, batch: Batch) -> Batch:  # pragma: no cover - interface
         raise NotImplementedError
 
+    def reset(self) -> None:
+        """Return all mutable runtime state to its just-opened value.
+
+        The runtime calls this after the (untimed) warmup batch and when a
+        shared executor re-arms a plan; every stateful subclass must
+        override it — warmup must not leak into the measured stream."""
+
+    def flush(self) -> Optional[Batch]:
+        """End-of-stream: emit any buffered partial results (e.g. the last
+        tumbling window) as a batch to push through downstream operators,
+        or None if there is nothing pending."""
+        return None
+
+    def signature(self) -> Tuple:
+        """Structural identity (class + init parameters, no runtime state)
+        — the unit of common-subplan factoring across queries."""
+        params = tuple(
+            (f.name, getattr(self, f.name))
+            for f in dataclasses.fields(self) if f.init)
+        return (type(self).__name__,) + params
+
     # -- state snapshot (aligned checkpoint) --------------------------------
     def snapshot(self) -> Dict[str, Any]:
         return {}
@@ -76,6 +97,9 @@ class OpContext:
     detector: Any = None
     detector_params: Any = None
     frame_shape: Tuple[int, int, int] = (3, 128, 256)
+    #: micro-batch size the driving runtime uses — operators that estimate
+    #: stream density (adaptive pruning) read it instead of guessing
+    micro_batch: int = 16
 
 
 # ===========================================================================
@@ -109,6 +133,9 @@ class SinkOp(Op):
         if "window_results" in batch:
             self.collected.extend(batch["window_results"])
         return batch
+
+    def reset(self):
+        self.collected = []
 
     def snapshot(self):
         return {"n": len(self.collected)}
@@ -170,6 +197,10 @@ class SkipOp(Op):
                 self._skip_left = self.amount
         self._prev = frames[-1]
         return _mask_batch(batch, keep)
+
+    def reset(self):
+        self._prev = None
+        self._skip_left = 0
 
     def snapshot(self):
         return {"prev": self._prev, "skip_left": self._skip_left}
@@ -361,7 +392,7 @@ class MLLMExtractOp(Op):
         return run
 
     def open(self, ctx: OpContext) -> None:
-        self._micro_batch_hint = 16
+        self._micro_batch_hint = ctx.micro_batch
         if self.model == "small":
             self._run = self._make_run(ctx.mllm_small, ctx.mllm_small_params)
         elif self.model == "pruned":
@@ -398,6 +429,10 @@ class MLLMExtractOp(Op):
             attrs[k] = np.asarray(v)[:n]
         batch["attrs"] = attrs
         return batch
+
+    def reset(self):
+        self.frames_processed = 0
+        self._density_ema = 0.5
 
     def snapshot(self):
         return {"frames_processed": self.frames_processed,
@@ -471,8 +506,6 @@ class WindowAggOp(Op):
         self.name = f"window[{self.kind},{self.window}]"
         self._buf: List[Dict[str, Any]] = []
         self._window_start = 0
-        self._results: List[Dict[str, Any]] = []
-        self._seen_plates: Dict[Tuple, int] = {}
 
     def process(self, batch: Batch) -> Batch:
         n = len(batch["idx"])
@@ -531,6 +564,27 @@ class WindowAggOp(Op):
             c = Counter(int(r["action"]) for r in recs if "action" in r)
             res["top3"] = [ACTIONS[a] for a, _ in c.most_common(3)]
         return res
+
+    def reset(self):
+        self._buf = []
+        self._window_start = 0
+
+    def flush(self) -> Optional[Batch]:
+        """Emit the open (partial) tumbling window, marked ``partial``.
+
+        Non-destructive early firing: buffer and window position are kept,
+        so a run segmented by snapshot/resume keeps tumbling identically —
+        if the stream continues, the window later closes normally and the
+        closed result supersedes the partial one (consumers dedup by window
+        span, see ``queries.catalog._window_results``)."""
+        if not self._buf:
+            return None
+        w0 = self._window_start
+        res = self._aggregate(self._buf, w0, w0 + self.window)
+        res["partial"] = True
+        return {"frames": np.zeros((0, 1, 1, 1), np.float32),
+                "idx": np.zeros((0,), np.int64),
+                "window_results": [res]}
 
     def snapshot(self):
         return {"buf": list(self._buf), "window_start": self._window_start}

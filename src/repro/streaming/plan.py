@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.streaming.operators import Op, SinkOp, SourceOp
 
@@ -46,6 +46,25 @@ class Plan:
     def remove(self, op: Op) -> "Plan":
         self.ops.remove(op)
         return self
+
+    # -- shared-execution helpers --------------------------------------------
+    def split_at(self, i: int) -> Tuple[List[Op], List[Op]]:
+        """Split the chain into (prefix ops[:i], suffix ops[i:])."""
+        assert 0 <= i <= len(self.ops)
+        return list(self.ops[:i]), list(self.ops[i:])
+
+    def common_prefix(self, other: "Plan") -> int:
+        """Length of the longest structurally-identical leading op chain
+        shared with ``other`` (never absorbs a Sink — the tail stays
+        per-query even for identical plans)."""
+        n = 0
+        for a, b in zip(self.ops, other.ops):
+            if isinstance(a, SinkOp) or isinstance(b, SinkOp):
+                break
+            if a.signature() != b.signature():
+                break
+            n += 1
+        return n
 
     def describe(self) -> str:
         return " -> ".join(op.name for op in self.ops)

@@ -9,13 +9,16 @@ metrics).
 Fault tolerance: ``snapshot()`` captures every operator's state + the source
 frame index (an aligned checkpoint — between micro-batches all channels are
 empty, so alignment is free); ``restore()`` resumes exactly-once by replaying
-the source from the recorded offset.
+the source from the recorded offset.  Frame indices continue from the
+restored offset, ``flush()`` is non-destructive (early firing), and the
+first ``run()`` after ``restore()`` suppresses the warmup reset — so
+tumbling windows tumble identically across a snapshot/resume boundary.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 import numpy as np
 
@@ -24,7 +27,6 @@ from repro.streaming.operators import (
     Op,
     OpContext,
     SinkOp,
-    SourceOp,
 )
 from repro.streaming.plan import Plan
 
@@ -41,14 +43,68 @@ class RunResult:
     labels: List[Dict[str, Any]]
 
 
+# ---------------------------------------------------------------------------
+# Shared warmup / end-of-stream protocol (used by StreamRuntime and
+# MultiQueryRuntime — one implementation, so the two executors cannot drift
+# and break the shared-vs-independent exact-match contract).
+# ---------------------------------------------------------------------------
+
+def warmup_ops(stream, micro_batch: int, advance, ops: List[Op]) -> None:
+    """Push one untimed batch (negative indices, separate from the measured
+    stream) through ``advance`` to trigger compilation, then rewind the
+    stream and Op.reset() every operator so no warmup state leaks."""
+    frames, labels = stream.batch(micro_batch)
+    advance({"frames": frames,
+             "idx": np.arange(len(labels)) - len(labels)})
+    stream.reset()
+    for op in ops:
+        op.reset()
+
+
+def drive_stream(stream, n_frames: int, micro_batch: int, base: int,
+                 advance, labels_all: List[Dict[str, Any]]) -> int:
+    """The measured driver loop: pull micro-batches, stamp absolute frame
+    indices continuing from ``base``, hand each batch to ``advance``.
+    Returns the new source index."""
+    done = 0
+    while done < n_frames:
+        take = min(micro_batch, n_frames - done)
+        frames, labels = stream.batch(take)
+        labels_all.extend(labels)
+        advance({"frames": frames,
+                 "idx": np.arange(base + done, base + done + take)})
+        done += take
+    return base + done
+
+
+def flush_ops(ops: List[Op], emit, terminal=None) -> None:
+    """End of stream: let every op in the chain emit buffered partials and
+    push them through the downstream ops.  ``emit`` receives window
+    results; ``terminal``, if given, receives each fully-propagated batch
+    (the multi-query runtime fans it out to the per-query tails)."""
+    for i, op in enumerate(ops):
+        fb = op.flush()
+        if fb is None:
+            continue
+        if "window_results" in fb:
+            emit(fb.pop("window_results"))
+        for nxt in ops[i + 1:]:
+            fb = nxt.process(fb)
+            if "window_results" in fb:
+                emit(fb.pop("window_results"))
+        if terminal is not None:
+            terminal(fb)
+
+
 class StreamRuntime:
     def __init__(self, plan: Plan, ctx: OpContext, micro_batch: int = 16):
         self.plan = plan
-        self.ctx = ctx
+        self.ctx = dataclasses.replace(ctx, micro_batch=micro_batch)
         self.micro_batch = micro_batch
         for op in plan.ops:
-            op.open(ctx)
+            op.open(self.ctx)
         self._source_index = 0
+        self._restored = False
 
     # ------------------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
@@ -61,9 +117,24 @@ class StreamRuntime:
         self._source_index = st["source_index"]
         for op, s in zip(self.plan.ops, st["ops"]):
             op.restore(s)
+        # the next run() must not warmup-reset the restored state
+        self._restored = True
 
     # ------------------------------------------------------------------
-    def run(self, stream, n_frames: int, warmup: int = 1) -> RunResult:
+    def _warmup(self, stream) -> None:
+        def advance(batch):
+            for op in self.plan.ops:
+                batch = op.process(batch)
+
+        warmup_ops(stream, self.micro_batch, advance, self.plan.ops)
+        self._source_index = 0
+
+    def run(self, stream, n_frames: int, warmup: int = 1,
+            flush: bool = True) -> RunResult:
+        """``warmup=1`` (default) makes this a *fresh* measurement: the
+        stream is rewound and every op reset.  Pass ``warmup=0`` to
+        continue a previous segment; the first run after ``restore()``
+        continues automatically."""
         sink = self.plan.ops[-1]
         assert isinstance(sink, SinkOp)
         sink.collected = []
@@ -71,46 +142,33 @@ class StreamRuntime:
         window_results: List[Dict[str, Any]] = []
         labels_all: List[Dict[str, Any]] = []
 
-        # warmup batch to trigger compilation (not timed, separate stream)
-        if warmup:
-            frames, labels = stream.batch(self.micro_batch)
-            batch = {"frames": frames,
-                     "idx": np.arange(len(labels)) - len(labels)}
-            for op in self.plan.ops:
-                batch = op.process(batch)
-            # reset state polluted by warmup
-            stream.reset()
-            for op in self.plan.ops:
-                if hasattr(op, "_prev"):
-                    op._prev = None
-                if hasattr(op, "_skip_left"):
-                    op._skip_left = 0
-                if hasattr(op, "_buf"):
-                    op._buf = []
-                    op._window_start = 0
-                if isinstance(op, MLLMExtractOp):
-                    op.frames_processed = 0
-            sink.collected = []
+        if warmup and not self._restored:
+            self._warmup(stream)
+        self._restored = False
+        # report per-run (not lifetime) model load: frames_processed keeps
+        # accumulating across resumed segments, so diff against the start
+        mllm_start = sum(op.frames_processed for op in self.plan.ops
+                         if isinstance(op, MLLMExtractOp))
 
-        done = 0
-        t0 = time.perf_counter()
-        while done < n_frames:
-            take = min(self.micro_batch, n_frames - done)
-            frames, labels = stream.batch(take)
-            labels_all.extend(labels)
-            batch = {"frames": frames,
-                     "idx": np.arange(done, done + take)}
-            done += take
-            self._source_index = done
+        def advance(batch):
+            # advance the checkpoint offset per micro-batch so a snapshot
+            # taken after a mid-run failure stays aligned with op state
+            self._source_index = int(batch["idx"][-1]) + 1
             for op in self.plan.ops:
                 counts[op.name] += len(batch["idx"])
                 batch = op.process(batch)
                 if "window_results" in batch:
                     window_results.extend(batch.pop("window_results"))
+
+        t0 = time.perf_counter()
+        drive_stream(stream, n_frames, self.micro_batch,
+                     self._source_index, advance, labels_all)
+        if flush:
+            flush_ops(self.plan.ops, window_results.extend)
         wall = time.perf_counter() - t0
 
         mllm_frames = sum(op.frames_processed for op in self.plan.ops
-                          if isinstance(op, MLLMExtractOp))
+                          if isinstance(op, MLLMExtractOp)) - mllm_start
         return RunResult(
             fps=n_frames / wall,
             wall_s=wall,

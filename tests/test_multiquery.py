@@ -1,0 +1,295 @@
+"""Multi-query shared-execution runtime tests.
+
+Covers the PR's contract: (a) shared-prefix results are bitwise identical
+to independent execution per query, (b) total MLLM load under sharing is
+strictly below the independent sum, (c) aligned snapshot/restore
+round-trips across the fan-out, (d) the final partial tumbling window is
+flushed at end of stream — plus the Op.reset() warmup contract the runtime
+now relies on.
+"""
+import numpy as np
+import pytest
+
+from repro.core.multiquery import factor_plans, merge_mllm_column
+from repro.data import TollBoothStream
+from repro.queries import QUERIES, get_query
+from repro.streaming.multiquery import MultiQueryRuntime
+from repro.streaming.operators import (
+    MLLMExtractOp,
+    OpContext,
+    SinkOp,
+    SkipOp,
+    SourceOp,
+    WindowAggOp,
+)
+from repro.streaming.plan import Plan
+from repro.streaming.pretrain import train_stream_models
+from repro.streaming.runtime import StreamRuntime
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    # tiny training: enough for the plumbing; accuracy is benchmarks' job
+    return train_stream_models(steps_mllm=40, steps_small=20, steps_det=30,
+                               cache_dir=None, verbose=False)
+
+
+MQ_QIDS = ("Q2", "Q6", "Q8")          # filter-only, window, divergent filter
+
+
+def _indep(qid, ctx, seed, n):
+    rt = StreamRuntime(get_query(qid).naive_plan(), ctx, micro_batch=16)
+    return rt.run(TollBoothStream(seed=seed), n)
+
+
+# ---------------------------------------------------------------------------
+# planner pass (model-free)
+# ---------------------------------------------------------------------------
+
+def test_factor_plans_merges_mllm_union():
+    plans = [get_query(q).naive_plan() for q in MQ_QIDS]
+    sh = factor_plans(plans)
+    assert [op.name for op in sh.prefix][0].startswith("source")
+    merged = sh.prefix[1]
+    assert isinstance(merged, MLLMExtractOp)
+    # union of ("present","color"), ("present","color"), ("present","color",
+    # "plate") — every requested task exactly once
+    assert set(merged.tasks) == {"present", "color", "plate"}
+    assert len(sh.tails) == 3
+    for tail in sh.tails:
+        assert isinstance(tail[-1], SinkOp)
+
+
+def test_factor_plans_stops_at_divergence_and_sink():
+    # identical plans: prefix extends through the filter but never eats a sink
+    p1, p2 = get_query("Q2").naive_plan(), get_query("Q2").naive_plan()
+    sh = factor_plans([p1, p2])
+    assert len(sh.prefix) == 3                      # source, mllm, filter
+    assert all(len(t) == 1 and isinstance(t[0], SinkOp) for t in sh.tails)
+    assert sh.queries == ["Q2", "Q2#1"]             # no per_query collision
+    # adversarial: a literal "Q2#1" submission must not collide either
+    p3, p4, p5 = (get_query("Q2").naive_plan() for _ in range(3))
+    p4.query = "Q2#1"
+    ids = factor_plans([p3, p4, p5]).queries
+    assert ids == ["Q2", "Q2#1", "Q2#2"] and len(set(ids)) == 3
+    # different models never merge
+    assert merge_mllm_column(
+        [MLLMExtractOp(tasks=("present",), model="big"),
+         MLLMExtractOp(tasks=("present",), model="small")]) is None
+
+
+def test_factor_plans_rejects_mixed_streams():
+    with pytest.raises(AssertionError):
+        factor_plans([get_query("Q2").naive_plan(),
+                      get_query("Q12").naive_plan()])
+
+
+def test_plan_common_prefix_api():
+    a = get_query("Q4").naive_plan()
+    b = get_query("Q4").naive_plan()
+    n = a.common_prefix(b)
+    assert n == len(a.ops) - 1                      # everything but the sink
+    prefix, suffix = a.split_at(n)
+    assert len(prefix) == n and isinstance(suffix[-1], SinkOp)
+    assert get_query("Q1").naive_plan().common_prefix(
+        get_query("Q2").naive_plan()) == 1          # tasks differ at mllm
+
+
+# ---------------------------------------------------------------------------
+# (a) + (b): exact-match fan-out, reduced model load
+# ---------------------------------------------------------------------------
+
+def test_shared_matches_independent_bitwise(ctx):
+    plans = [get_query(q).naive_plan() for q in MQ_QIDS]
+    mq = MultiQueryRuntime(plans, ctx, micro_batch=16)
+    shared = mq.run(TollBoothStream(seed=42), 96)
+    for qid in MQ_QIDS:
+        ind = _indep(qid, ctx, 42, 96)
+        assert shared.per_query[qid].outputs == ind.outputs
+        assert shared.per_query[qid].window_results == ind.window_results
+        assert get_query(qid).evaluate(shared.per_query[qid]) == \
+            get_query(qid).evaluate(ind)
+
+
+def test_shared_mllm_frames_strictly_less(ctx):
+    plans = [get_query(q).naive_plan() for q in MQ_QIDS]
+    mq = MultiQueryRuntime(plans, ctx, micro_batch=16)
+    shared = mq.run(TollBoothStream(seed=7), 64)
+    indep_sum = sum(_indep(q, ctx, 7, 64).mllm_frames for q in MQ_QIDS)
+    assert shared.mllm_frames < indep_sum
+    assert shared.mllm_frames == 64                # union extract, once/frame
+    assert shared.n_queries == 3
+
+
+# ---------------------------------------------------------------------------
+# (c): snapshot/restore across the fan-out
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_roundtrip(ctx):
+    qids = ("Q6", "Q8")
+    plans = [get_query(q).naive_plan() for q in qids]
+    mq = MultiQueryRuntime(plans, ctx, micro_batch=16)
+    s = TollBoothStream(seed=13)
+    mq.run(s, 48, warmup=1, flush=False)           # first segment
+    st = mq.snapshot()
+    assert st["source_index"] == 48
+    cont = mq.run(s, 48, warmup=0, flush=True)     # continue to frame 96
+    # model load is per-run, not lifetime: the resumed segment saw 48 frames
+    assert cont.mllm_frames == 48
+
+    # resume: replay the source from the recorded offset into the restored
+    # operator state — must reproduce the continuation exactly, even with
+    # the default warmup (restore() suppresses the warmup reset)
+    mq.restore(st)
+    s2 = TollBoothStream(seed=13)
+    s2.batch(48)                                   # replay to the offset
+    resumed = mq.run(s2, 48, flush=True)
+    for qid in qids:
+        assert resumed.per_query[qid].outputs == cont.per_query[qid].outputs
+        assert resumed.per_query[qid].window_results == \
+            cont.per_query[qid].window_results
+
+
+# ---------------------------------------------------------------------------
+# (d): end-of-stream flush of the final partial window
+# ---------------------------------------------------------------------------
+
+def test_window_flush_emits_final_partial():
+    op = WindowAggOp(kind="top_color", window=16)
+    b = {"frames": np.zeros((10, 1, 1, 1)), "idx": np.arange(10),
+         "attrs": {"color": np.zeros(10, np.int64)}}
+    out = op.process(b)
+    assert "window_results" not in out
+    fb = op.flush()
+    res = fb["window_results"][0]
+    assert res["partial"] and res["window"] == (0, 16)
+    assert res["top_color"] == "red" and res["n"] == 10
+    # non-destructive early firing: the stream can continue and the window
+    # still closes normally with its full contents
+    b2 = {"frames": np.zeros((8, 1, 1, 1)), "idx": np.arange(10, 18),
+          "attrs": {"color": np.ones(8, np.int64)}}
+    out2 = op.process(b2)
+    closed = out2["window_results"][0]
+    assert closed["window"] == (0, 16) and "partial" not in closed
+    assert closed["n"] == 16
+
+
+def test_runtime_flushes_partial_window_model_free():
+    # window 32 over 40 frames: one closed window + one flushed partial
+    plan = Plan([SourceOp(), WindowAggOp(kind="top_color", window=32),
+                 SinkOp()])
+    rt = StreamRuntime(plan, OpContext(), micro_batch=16)
+    res = rt.run(TollBoothStream(seed=3), 40, warmup=0)
+    assert [w["window"] for w in res.window_results] == [(0, 32), (32, 64)]
+    assert res.window_results[-1]["partial"]
+
+
+def test_segmented_flush_does_not_corrupt_windows():
+    """Flush is non-destructive early firing: a run segmented (with flush
+    after each segment) closes exactly the same windows as one continuous
+    run — partials are refinements, never reassignments."""
+    def make_rt():
+        return StreamRuntime(
+            Plan([SourceOp(), WindowAggOp(kind="top_color", window=32),
+                  SinkOp()]), OpContext(), micro_batch=16)
+
+    cont = make_rt().run(TollBoothStream(seed=9), 80, warmup=0)
+    rt = make_rt()
+    s = TollBoothStream(seed=9)
+    seg1 = rt.run(s, 40, warmup=0, flush=True)
+    seg2 = rt.run(s, 40, warmup=0, flush=True)
+    seg_windows = seg1.window_results + seg2.window_results
+
+    def closed(wins):
+        return [w for w in wins if not w.get("partial")]
+
+    assert closed(seg_windows) == closed(cont.window_results)
+    assert seg_windows[-1] == cont.window_results[-1]   # same final partial
+
+
+def test_partial_window_superseded_by_closed():
+    """Evaluator consumer: a closed window result supersedes the partial
+    early-firing of the same span, keeping positional indexing aligned."""
+    from repro.queries.catalog import _window_results
+
+    r = type("R", (), {"window_results": [
+        {"kind": "top_color", "window": (0, 32), "top_color": "red"},
+        {"kind": "top_color", "window": (32, 64), "partial": True,
+         "top_color": "blue"},
+        {"kind": "top_color", "window": (32, 64), "top_color": "red"},
+        {"kind": "top_color", "window": (64, 96), "partial": True,
+         "top_color": "grey"},
+    ]})()
+    wins = _window_results(r, "top_color")
+    assert [w["window"] for w in wins] == [(0, 32), (32, 64), (64, 96)]
+    assert wins[1]["top_color"] == "red" and not wins[1].get("partial")
+    assert wins[2].get("partial")                  # final partial survives
+
+
+def test_multiquery_flushes_partial_window(ctx):
+    # unfiltered window plan: every frame reaches the window op, so the
+    # tumble/flush boundary is deterministic regardless of model quality
+    def window_plan(qid):
+        return Plan([SourceOp(stream_name="tollbooth"),
+                     MLLMExtractOp(tasks=("present", "color")),
+                     WindowAggOp(kind="top_color", window=256), SinkOp()],
+                    query=qid)
+
+    mq = MultiQueryRuntime([window_plan("W1"), window_plan("W2")], ctx,
+                           micro_batch=16)
+    shared = mq.run(TollBoothStream(seed=21), 300)  # window=256 -> partial
+    for qid in ("W1", "W2"):
+        wins = shared.per_query[qid].window_results
+        assert [w["window"] for w in wins] == [(0, 256), (256, 512)]
+        assert wins[-1].get("partial")
+
+
+# ---------------------------------------------------------------------------
+# Op.reset() contract (warmup must not pollute the measured stream)
+# ---------------------------------------------------------------------------
+
+def test_reset_contract_model_free():
+    skip = SkipOp(amount=3)
+    skip._prev, skip._skip_left = np.zeros((3, 4, 4)), 2
+    skip.reset()
+    assert skip._prev is None and skip._skip_left == 0
+
+    win = WindowAggOp(kind="top_color", window=8)
+    win._buf, win._window_start = [{"idx": 1}], 8
+    win.reset()
+    assert win._buf == [] and win._window_start == 0
+
+    mllm = MLLMExtractOp(tasks=("present",), model="adaptive")
+    mllm.frames_processed, mllm._density_ema = 99, 0.01
+    mllm.reset()
+    assert mllm.frames_processed == 0 and mllm._density_ema == 0.5
+
+    sink = SinkOp()
+    sink.collected = [{"idx": 0}]
+    sink.reset()
+    assert sink.collected == []
+
+
+def test_warmup_resets_adaptive_density_ema(ctx):
+    """Regression: warmup used to leave _density_ema polluted, skewing the
+    first big-vs-pruned decision of the measured stream."""
+    def make_plan():
+        return Plan([SourceOp(), MLLMExtractOp(
+            tasks=("present", "color"), model="adaptive"), SinkOp()])
+
+    polluted = make_plan()
+    rt1 = StreamRuntime(polluted, ctx, micro_batch=8)
+    polluted.ops[1]._density_ema = 0.0             # as a stale warmup leaves it
+    res1 = rt1.run(TollBoothStream(seed=17), 32, warmup=1)
+
+    fresh = make_plan()
+    rt2 = StreamRuntime(fresh, ctx, micro_batch=8)
+    res2 = rt2.run(TollBoothStream(seed=17), 32, warmup=1)
+    assert res1.outputs == res2.outputs
+    assert polluted.ops[1]._density_ema == fresh.ops[1]._density_ema
+
+
+def test_micro_batch_hint_threaded(ctx):
+    plan = get_query("Q2").naive_plan()
+    StreamRuntime(plan, ctx, micro_batch=8)
+    assert plan.ops[1]._micro_batch_hint == 8
