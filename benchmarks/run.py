@@ -1,14 +1,52 @@
 """Benchmark driver: one section per paper table/figure + substrate benches.
 
-Prints ``name,us_per_call_or_metric,derived`` CSV rows.
+Prints ``name,us_per_call_or_metric,derived`` CSV rows; with ``--json DIR``
+each section additionally writes machine-readable rows to
+``DIR/BENCH_<section>.json`` (name, metric, derived, timestamp) so the perf
+trajectory across PRs can be diffed without scraping stdout.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-samsara]
+                                          [--json DIR]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+import time
 import traceback
+from typing import List
+
+
+def _structured(row: str) -> dict:
+    """Split a CSV row into JSON fields with a *numeric* metric.
+
+    Kernel/serving rows are ``name,value,derived``; samsara rows are
+    ``section,label,value,derived`` — for those the label folds into the
+    name (``fig_ms.forwards``) so ``metric`` always carries the
+    measurement.  The derived remainder keeps its commas."""
+    parts = row.split(",")
+    name = parts[0]
+    metric = parts[1] if len(parts) > 1 else ""
+    rest = parts[2:]
+    if len(parts) >= 3 and metric != "ERROR":
+        try:
+            float(metric)
+        except ValueError:
+            name = f"{parts[0]}.{parts[1]}"
+            metric = parts[2]
+            rest = parts[3:]
+    try:
+        metric = float(metric)
+    except ValueError:
+        pass                    # ERROR / non-numeric stays a string
+    return {
+        "name": name,
+        "metric": metric,
+        "derived": ",".join(rest),
+        "timestamp": time.time(),
+    }
 
 
 def main() -> None:
@@ -16,9 +54,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fig1b only for the Saṃsāra section")
     ap.add_argument("--skip-samsara", action="store_true")
+    ap.add_argument("--json", metavar="DIR", default=None,
+                    help="also write BENCH_<section>.json files to DIR")
     args = ap.parse_args()
 
-    rows = []
     sections = []
     from benchmarks import kernel_bench, serving_bench
 
@@ -31,16 +70,30 @@ def main() -> None:
                          lambda: samsara_bench.run_all(quick=args.quick)))
 
     print("name,us_per_call,derived")
-    ok = True
+    failed: List[str] = []
     for name, fn in sections:
+        rows: List[str] = []
         try:
             for row in fn():
                 print(row, flush=True)
                 rows.append(row)
         except Exception:  # noqa: BLE001
-            ok = False
-            print(f"{name},ERROR,{traceback.format_exc()[-300:]!r}")
-    sys.exit(0 if ok else 1)
+            failed.append(name)
+            err = f"{name},ERROR,{traceback.format_exc()[-300:]!r}"
+            print(err)
+            rows.append(err)       # the JSON must carry the reason too
+        if args.json:
+            os.makedirs(args.json, exist_ok=True)
+            path = os.path.join(args.json, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump({"section": name,
+                           "ok": name not in failed,
+                           "rows": [_structured(r) for r in rows]},
+                          f, indent=1)
+    if failed:
+        print(f"FAILED sections: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
+    sys.exit(0)
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ which fans each annotated shared batch out to the per-query tails.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 from repro.streaming.mllm import MLLM_TASKS
 from repro.streaming.operators import MLLMExtractOp, Op, SinkOp, SourceOp
@@ -49,19 +49,47 @@ class SharedExecution:
         return "\n".join(lines)
 
 
+def mllm_merge_key(op: MLLMExtractOp) -> Tuple:
+    """Physical identity of an extract op *modulo its task set*: two
+    extracts with the same merge key run the same backbone variant and can
+    therefore collapse into one union-task forward."""
+    return (op.model, op.density_threshold)
+
+
 def merge_mllm_column(ops: List[Op]) -> Optional[MLLMExtractOp]:
     """Merge one MLLMExtractOp per plan into a union-task op, or None if the
     column is not uniformly the same physical MLLM configuration."""
     if not all(isinstance(o, MLLMExtractOp) for o in ops):
         return None
-    models = {o.model for o in ops}
-    thresholds = {o.density_threshold for o in ops}
-    if len(models) != 1 or len(thresholds) != 1:
+    keys = {mllm_merge_key(o) for o in ops}
+    if len(keys) != 1:
         return None
     union = tuple(t for t in MLLM_TASKS
                   if any(t in o.tasks for o in ops))
-    return MLLMExtractOp(tasks=union, model=models.pop(),
-                         density_threshold=thresholds.pop())
+    model, threshold = keys.pop()
+    return MLLMExtractOp(tasks=union, model=model,
+                         density_threshold=threshold)
+
+
+def share_key(plan: Plan) -> Tuple:
+    """Grouping key for the sharing-tree planner: the signature chain of
+    every op before the first MLLM extract, plus that extract's merge key.
+
+    Plans with equal share keys factor into one group whose prefix reaches
+    *through* a merged union-task extract (the expensive op); plans with
+    different keys would stop factoring at the first structural divergence
+    anyway, so grouping by this key is exactly "share where it pays".
+    Plans without an MLLM get ``(pre-sink signature chain, None)``, so
+    pure relational plans only share if structurally identical up to the
+    sink."""
+    pre: List[Tuple] = []
+    for op in plan.ops:
+        if isinstance(op, MLLMExtractOp):
+            return (tuple(pre), mllm_merge_key(op))
+        if isinstance(op, SinkOp):
+            break
+        pre.append(op.signature())
+    return (tuple(pre), None)
 
 
 def factor_plans(plans: List[Plan]) -> SharedExecution:

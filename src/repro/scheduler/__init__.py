@@ -1,0 +1,42 @@
+"""Cross-stream shared-MLLM serving tier (the paper's roadmap section on
+serving *many queries over many feeds*).
+
+The source paper's throughput lever is MLLM model load; its roadmap asks
+for a system where the optimizer and executor share that load first across
+the queries of one feed, then across feeds — "share the model, not the
+pipeline".  This package is that serving tier, in three pieces:
+
+* ``SharingTreePlanner`` (``sharing_tree``) — generalizes the single
+  longest-common-prefix factoring of ``repro.core.multiquery`` to a
+  cost-based sharing *tree*: plans are grouped by the ``Op.signature()``
+  chain of their Skip/Crop/preprocess prefix plus their extract's physical
+  merge key, so *subsets* of queries share even when the global common
+  prefix across all submitted plans is empty (e.g. a mixed
+  tollbooth + volleyball workload), and a model-load cost estimate decides
+  per group between shared and independent execution.
+
+* ``SharedExtractServer`` (``extract_server``) — one jitted union-task
+  extract program per physical backbone variant, serving *every* feed:
+  extract requests from different streams are coalesced into padded,
+  shape-bucketed batches (the power-of-two bucket idiom of
+  ``serving.engine`` bounds recompiles), so K feeds cost one forward per
+  coalesced batch instead of K.
+
+* ``MultiStreamRuntime`` (``multistream``) — drives heterogeneous feeds
+  concurrently with round-robin micro-batch scheduling and per-stream
+  backpressure, suspending each feed's pipeline at its extract ops and
+  routing them through the shared server, while keeping every query's
+  outputs bitwise identical to independent execution.
+"""
+from repro.scheduler.sharing_tree import (
+    SharingForest,
+    SharingGroup,
+    SharingTreePlanner,
+)
+from repro.scheduler.extract_server import ExtractRequest, SharedExtractServer
+from repro.scheduler.multistream import (
+    Feed,
+    FeedResult,
+    MultiStreamResult,
+    MultiStreamRuntime,
+)

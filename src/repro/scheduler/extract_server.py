@@ -1,0 +1,160 @@
+"""Shared MLLM extract server: one model, many feeds.
+
+Every ``MLLMExtractOp`` used to own a private jitted program, so K feeds
+(and, before multi-query sharing, N queries) each paid their own forward
+and their own compilation.  The server inverts the ownership: it holds one
+jitted union-task extract program per *physical backbone variant*
+(big / small / pruned — the same resolution ``MLLMExtractOp.open`` does,
+with "adaptive" resolved by the op's density tracker before submission),
+and coalesces extract requests from different streams into batched
+forwards.
+
+Coalescing is shape-bucketed and padded: requests whose frames agree on
+(C, H, W) — same preprocessing stage — concatenate into one batch, padded
+to a power-of-two bucket (the ``serving.engine`` ``_bucket`` idiom) so the
+number of distinct compiled shapes stays logarithmic in batch size.
+Requests with different frame shapes (a cropped tollbooth feed next to a
+full-frame volleyball feed) land in different buckets but still share the
+compiled program cache across feeds.
+
+Because ``make_extract_fn`` normalizes per frame and every head is
+computed in one forward, each row of a coalesced batch is bitwise
+identical to what the op's solo path would have produced — the server
+changes *how many* forwards run, never *what* any query observes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.streaming.mllm import make_extract_fn, variant_models
+from repro.streaming.operators import OpContext, _bucket_pad
+
+
+@dataclasses.dataclass
+class ExtractRequest:
+    """One pending union extract: ``frames`` in, per-task predictions out
+    (filled by ``SharedExtractServer.drain``)."""
+
+    variant: str                      # big | small | pruned
+    frames: np.ndarray                # (n, C, H, W)
+    feed: str = ""
+    result: Optional[Dict[str, np.ndarray]] = None
+
+    @property
+    def n(self) -> int:
+        return int(self.frames.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class SharedExtractServer:
+    """Coalesces union-task extract requests across feeds into one batched
+    forward per (variant, frame-shape) bucket.
+
+    ``max_batch`` bounds a single coalesced forward (memory / latency
+    ceiling); a drain splits larger groups into several forwards."""
+
+    VARIANTS = ("big", "small", "pruned")
+
+    def __init__(self, ctx: OpContext, max_batch: int = 64):
+        assert max_batch >= 1
+        self.ctx = ctx
+        self.max_batch = max_batch
+        self._fns: Dict[str, Any] = {}
+        self._queue: List[ExtractRequest] = []
+        self.stats = self._fresh_stats()
+
+    @staticmethod
+    def _fresh_stats() -> Dict[str, int]:
+        return {"forwards": 0, "frames": 0, "padded_frames": 0,
+                "requests": 0, "coalesced_batches": 0}
+
+    def reset_stats(self) -> None:
+        """Drop accounting (e.g. after warmup) without dropping the
+        compiled program cache — that is the whole point of warmup."""
+        self.stats = self._fresh_stats()
+
+    # ------------------------------------------------------------------
+    def _fn(self, variant: str):
+        if variant not in self._fns:
+            mllm, params = variant_models(self.ctx)[variant]
+            assert mllm is not None, f"ctx has no model for {variant!r}"
+            self._fns[variant] = make_extract_fn(mllm, params)
+        return self._fns[variant]
+
+    # ------------------------------------------------------------------
+    def submit(self, variant: str, frames: np.ndarray,
+               feed: str = "") -> ExtractRequest:
+        """Queue an extract; returns the request whose ``result`` is filled
+        at the next ``drain()``.  "adaptive" must be resolved by the caller
+        (``MLLMExtractOp.begin_extract``) — the density EMA is per-op state
+        the server has no business owning."""
+        assert variant in self.VARIANTS, variant
+        assert frames.ndim == 4 and frames.shape[0] > 0, frames.shape
+        req = ExtractRequest(variant=variant, frames=frames, feed=feed)
+        self._queue.append(req)
+        self.stats["requests"] += 1
+        return req
+
+    def pending_frames(self, feed: Optional[str] = None) -> int:
+        return sum(r.n for r in self._queue
+                   if feed is None or r.feed == feed)
+
+    def pending_requests(self, feed: Optional[str] = None) -> int:
+        return sum(1 for r in self._queue
+                   if feed is None or r.feed == feed)
+
+    # ------------------------------------------------------------------
+    def _run_chunk(self, variant: str, chunk: List[ExtractRequest]) -> None:
+        total = sum(r.n for r in chunk)
+        bucket = _bucket_pad(total)
+        shape = chunk[0].frames.shape[1:]
+        dtype = chunk[0].frames.dtype
+        batch = np.zeros((bucket,) + shape, dtype)
+        off = 0
+        for r in chunk:
+            batch[off:off + r.n] = r.frames
+            off += r.n
+        preds = self._fn(variant)(jnp.asarray(batch))
+        preds = {k: np.asarray(v) for k, v in preds.items()}
+        off = 0
+        for r in chunk:
+            r.result = {k: v[off:off + r.n] for k, v in preds.items()}
+            off += r.n
+        self.stats["forwards"] += 1
+        self.stats["frames"] += total
+        self.stats["padded_frames"] += bucket - total
+        if len(chunk) > 1:
+            self.stats["coalesced_batches"] += 1
+
+    def drain(self) -> int:
+        """Run every queued request; returns the number of forwards.
+
+        Requests group by (variant, frame shape, dtype); each group is
+        chunked greedily under ``max_batch`` frames per forward (a request
+        larger than ``max_batch`` still runs whole — the op's own micro-
+        batch is the upstream bound)."""
+        queue, self._queue = self._queue, []
+        groups: Dict[Tuple, List[ExtractRequest]] = {}
+        for r in queue:
+            key = (r.variant, r.frames.shape[1:], r.frames.dtype.str)
+            groups.setdefault(key, []).append(r)
+        forwards0 = self.stats["forwards"]
+        for (variant, _, _), reqs in groups.items():
+            chunk: List[ExtractRequest] = []
+            size = 0
+            for r in reqs:
+                if chunk and size + r.n > self.max_batch:
+                    self._run_chunk(variant, chunk)
+                    chunk, size = [], 0
+                chunk.append(r)
+                size += r.n
+            if chunk:
+                self._run_chunk(variant, chunk)
+        return self.stats["forwards"] - forwards0

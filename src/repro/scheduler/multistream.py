@@ -1,0 +1,404 @@
+"""Multi-feed serving runtime: K streams, one shared MLLM serving tier.
+
+``MultiStreamRuntime`` generalizes ``MultiQueryRuntime`` (N queries, one
+stream) to N queries over K heterogeneous feeds (e.g. three tollbooth
+cameras with different traffic plus a volleyball court).  Per feed, the
+``SharingTreePlanner`` factors that feed's plans into sharing groups
+(shared signature prefix + merged union-task extract + per-query tails);
+across feeds, every group's extract requests route through one
+``SharedExtractServer`` that coalesces them into shape-bucketed batched
+forwards — K feeds cost one forward per coalesced batch instead of K.
+
+Scheduling is round-robin over feeds at micro-batch granularity (the
+starting feed rotates every round so no feed systematically front-runs the
+coalescing window), with per-stream backpressure: a feed whose un-fulfilled
+extract continuations reach its budget of ``max_pending × n_groups`` is
+skipped until the server drains, so one stalled/bursty feed cannot grow
+the request queue unboundedly while the others starve.
+
+Execution is suspension-based: a group advances each micro-batch through
+its prefix until an ``MLLMExtractOp``, parks the batch as a continuation
+keyed by the server request, and resumes — in submission order, so every
+stateful op still observes batches in stream order — once the server
+fulfils it.  Because the server runs the *same* jitted extract program the
+op's solo path uses (per-frame normalization, union heads), every query's
+outputs are bitwise identical to independent execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.scheduler.extract_server import ExtractRequest, SharedExtractServer
+from repro.scheduler.sharing_tree import SharingForest, SharingTreePlanner
+from repro.streaming.multiquery import (broadcast_windows, fan_out_tails,
+                                        flush_shared)
+from repro.streaming.operators import (
+    Batch,
+    MLLMExtractOp,
+    Op,
+    OpContext,
+    SinkOp,
+    SourceOp,
+)
+from repro.streaming.plan import Plan
+from repro.streaming.runtime import (
+    RunResult,
+    mllm_frames_of,
+    warmup_ops,
+)
+
+
+@dataclasses.dataclass
+class Feed:
+    """One physical stream plus the queries standing on it."""
+
+    name: str
+    stream: Any                       # TollBoothStream / VolleyballStream
+    plans: List[Plan]
+
+
+@dataclasses.dataclass
+class FeedResult:
+    name: str
+    n_frames: int
+    mllm_frames: int
+    per_query: Dict[str, RunResult]
+    plan: str
+
+
+@dataclasses.dataclass
+class MultiStreamResult:
+    #: aggregate throughput in query-frames/s across every feed
+    fps: float
+    wall_s: float
+    n_feeds: int
+    n_queries: int
+    #: frames through MLLM extracts (each shared prefix counted once)
+    mllm_frames: int
+    #: server accounting for the sharing claim: ``forwards`` is the number
+    #: of jitted extract invocations serving *all* feeds
+    server_stats: Dict[str, int]
+    feeds: Dict[str, FeedResult]
+
+
+@dataclasses.dataclass
+class _Pending:
+    """A suspended micro-batch: resumes past ``op_index`` once ``req`` is
+    fulfilled by the server."""
+
+    op_index: int
+    batch: Batch
+    req: ExtractRequest
+    n: int
+
+
+class _GroupExec:
+    """Executor for one sharing group of one feed: shared prefix with
+    extract suspension points + per-query fan-out tails."""
+
+    def __init__(self, group, ctx: OpContext, server: SharedExtractServer,
+                 feed: str, parallel_tails: bool):
+        self.exe = group.execution
+        self.group = group
+        self.server = server
+        self.feed = feed
+        self.parallel_tails = parallel_tails
+        for op in self.all_ops():
+            op.open(ctx)
+        for tail in self.exe.tails:
+            assert isinstance(tail[-1], SinkOp), "tails must end in a Sink"
+        self.reset_accumulators()
+
+    def all_ops(self) -> List[Op]:
+        ops = list(self.exe.prefix)
+        for tail in self.exe.tails:
+            ops.extend(tail)
+        return ops
+
+    def reset_accumulators(self) -> None:
+        self.pcounts: Dict[str, int] = {op.name: 0
+                                        for op in self.exe.prefix}
+        self.counts: List[Dict[str, int]] = [
+            {op.name: 0 for op in tail} for tail in self.exe.tails]
+        self.windows: List[List[Dict[str, Any]]] = [
+            [] for _ in self.exe.tails]
+
+    def begin_run(self) -> None:
+        """Per-run reset: drop collected sink records and accumulators
+        (operator *state* — windows, skip carries — persists, so a
+        warmup=0 run continues the stream exactly like StreamRuntime)."""
+        for tail in self.exe.tails:
+            tail[-1].collected = []
+        self.reset_accumulators()
+
+    # ------------------------------------------------------------------
+    def start(self, batch: Batch) -> Optional[_Pending]:
+        """Advance a fresh micro-batch; returns a continuation if the
+        prefix suspended at an extract, else None (fan-out done)."""
+        return self._advance(dict(batch), 0)
+
+    def resume(self, p: _Pending) -> Optional[_Pending]:
+        op = self.exe.prefix[p.op_index]
+        batch = op.apply_preds(p.batch, p.req.result, p.n)
+        return self._advance(batch, p.op_index + 1)
+
+    def _advance(self, batch: Batch, i: int) -> Optional[_Pending]:
+        while i < len(self.exe.prefix):
+            op = self.exe.prefix[i]
+            self.pcounts[op.name] += len(batch["idx"])
+            n = int(batch["frames"].shape[0])
+            if isinstance(op, MLLMExtractOp) and n > 0:
+                variant = op.begin_extract(n)
+                req = self.server.submit(variant, batch["frames"],
+                                         feed=self.feed)
+                return _Pending(op_index=i, batch=batch, req=req, n=n)
+            batch = broadcast_windows(op.process(batch), self.windows)
+            i += 1
+        self._fan_out(batch)
+        return None
+
+    def _fan_out(self, batch: Batch) -> None:
+        fan_out_tails(self.exe.tails, batch, self.counts, self.windows,
+                      parallel=self.parallel_tails)
+
+    def flush(self) -> None:
+        """End of stream.  Flush batches carry no frames (only buffered
+        window results), so pushing them through a downstream extract op is
+        a no-op and never needs the server."""
+        flush_shared(self.exe.prefix, self.exe.tails, self.windows,
+                     self._fan_out)
+
+
+class _FeedState:
+    def __init__(self, feed: Feed, groups: List[_GroupExec]):
+        self.feed = feed
+        self.groups = groups
+        self.source_index = 0
+        self.labels: List[Dict[str, Any]] = []
+        self.pendings: List[tuple] = []      # (group, _Pending) FIFO
+
+    @property
+    def name(self) -> str:
+        return self.feed.name
+
+    def all_ops(self) -> List[Op]:
+        return [op for g in self.groups for op in g.all_ops()]
+
+
+class MultiStreamRuntime:
+    def __init__(self, feeds: List[Feed], ctx: OpContext,
+                 micro_batch: int = 16,
+                 server: Optional[SharedExtractServer] = None,
+                 planner: Optional[SharingTreePlanner] = None,
+                 max_pending: int = 2,
+                 coalesce_frames: Optional[int] = None,
+                 parallel_tails: bool = True):
+        assert feeds, "need at least one feed"
+        names = [f.name for f in feeds]
+        assert len(set(names)) == len(names), f"duplicate feed names {names}"
+        self.ctx = dataclasses.replace(ctx, micro_batch=micro_batch)
+        self.micro_batch = micro_batch
+        self.server = server if server is not None \
+            else SharedExtractServer(self.ctx)
+        self.planner = planner if planner is not None else SharingTreePlanner()
+        self.max_pending = max_pending
+        #: drain the server once this many frames are queued (default: one
+        #: full coalesced forward) — or when no feed can progress
+        self.coalesce_frames = coalesce_frames if coalesce_frames is not None \
+            else self.server.max_batch
+        self.forests: Dict[str, SharingForest] = {}
+        self._feeds: List[_FeedState] = []
+        for feed in feeds:
+            streams = {p.ops[0].stream_name for p in feed.plans
+                       if isinstance(p.ops[0], SourceOp)}
+            assert len(streams) == 1, \
+                f"feed {feed.name!r} mixes source streams {streams}"
+            forest = self.planner.plan(feed.plans)
+            self.forests[feed.name] = forest
+            groups = [_GroupExec(g, self.ctx, self.server, feed.name,
+                                 parallel_tails)
+                      for g in forest.groups()]
+            self._feeds.append(_FeedState(feed, groups))
+
+    # ------------------------------------------------------------------
+    def describe(self) -> str:
+        return "\n".join(f"[{fs.name}]\n{self.forests[fs.name].describe()}"
+                         for fs in self._feeds)
+
+    # ------------------------------------------------------------------
+    def _settle(self, fs: _FeedState) -> None:
+        """Resume fulfilled continuations of one feed in FIFO order (so
+        stateful post-extract ops observe stream order); re-suspensions
+        keep their position in the queue."""
+        out = []
+        for group, p in fs.pendings:
+            if p.req.done:
+                nxt = group.resume(p)
+                if nxt is not None:
+                    out.append((group, nxt))
+            else:
+                out.append((group, p))
+        fs.pendings = out
+
+    def _drain_all(self) -> None:
+        """Coalesced drain + resume until no continuation is runnable."""
+        while self.server.pending_requests():
+            self.server.drain()
+            for fs in self._feeds:
+                self._settle(fs)
+
+    def _warmup(self) -> None:
+        """One untimed batch per feed through its full group set (and the
+        server — compiling the shared extract programs is the point), then
+        rewind streams, reset ops, drop accumulators and server stats."""
+        for fs in self._feeds:
+            def advance(batch):
+                for g in fs.groups:
+                    p = g.start(batch)
+                    if p is not None:
+                        fs.pendings.append((g, p))
+                self._drain_all()
+
+            warmup_ops(fs.feed.stream, self.micro_batch, advance,
+                       fs.all_ops())
+            assert not fs.pendings
+            fs.source_index = 0
+            for g in fs.groups:
+                g.reset_accumulators()
+        self.server.reset_stats()
+
+    # ------------------------------------------------------------------
+    def run(self, n_frames: Union[int, Dict[str, int]],
+            warmup: int = 1) -> MultiStreamResult:
+        """Drive every feed ``n_frames`` frames (int, or per-feed dict).
+
+        ``warmup=1`` (default) makes this a *fresh* measurement — streams
+        rewound, every op reset — exactly like ``StreamRuntime.run``; pass
+        ``warmup=0`` to continue previous segments.  Either way, sinks and
+        per-run accumulators start empty."""
+        if isinstance(n_frames, int):
+            frames_by_feed = {fs.name: n_frames for fs in self._feeds}
+        else:
+            frames_by_feed = dict(n_frames)
+            assert set(frames_by_feed) == {fs.name for fs in self._feeds}
+
+        for fs in self._feeds:
+            assert not fs.pendings
+            fs.labels = []
+            for g in fs.groups:
+                g.begin_run()
+        if warmup:
+            self._warmup()
+        # per-run (not lifetime) model load, per prefix/tail component —
+        # the same convention as the single-stream executors
+        mllm_start = {
+            fs.name: [(mllm_frames_of(g.exe.prefix),
+                       [mllm_frames_of(t) for t in g.exe.tails])
+                      for g in fs.groups]
+            for fs in self._feeds}
+
+        remaining = dict(frames_by_feed)
+        t0 = time.perf_counter()
+        rnd = 0
+        while any(remaining.values()) or \
+                any(fs.pendings for fs in self._feeds):
+            order = self._feeds[rnd % len(self._feeds):] + \
+                self._feeds[:rnd % len(self._feeds)]
+            progressed = False
+            for fs in order:
+                if remaining[fs.name] <= 0:
+                    continue
+                if len(fs.pendings) >= self.max_pending * len(fs.groups):
+                    continue                      # per-stream backpressure
+                take = min(self.micro_batch, remaining[fs.name])
+                frames, labels = fs.feed.stream.batch(take)
+                fs.labels.extend(labels)
+                batch = {"frames": frames,
+                         "idx": np.arange(fs.source_index,
+                                          fs.source_index + take)}
+                fs.source_index += take
+                remaining[fs.name] -= take
+                for g in fs.groups:
+                    p = g.start(batch)
+                    if p is not None:
+                        fs.pendings.append((g, p))
+                progressed = True
+            if self.server.pending_frames() >= self.coalesce_frames \
+                    or not progressed:
+                self._drain_all()
+            rnd += 1
+        self._drain_all()
+        for fs in self._feeds:
+            for g in fs.groups:
+                g.flush()
+        wall = time.perf_counter() - t0
+
+        return self._collect(frames_by_feed, mllm_start, wall)
+
+    # ------------------------------------------------------------------
+    def _collect(self, frames_by_feed: Dict[str, int],
+                 mllm_start: Dict[str, List[tuple]],
+                 wall: float) -> MultiStreamResult:
+        total_q = sum(len(g.exe.queries) for fs in self._feeds
+                      for g in fs.groups)
+        #: query-frames served this run — feeds may have different budgets
+        total_qframes = sum(
+            frames_by_feed[fs.name] * sum(len(g.exe.queries)
+                                          for g in fs.groups)
+            for fs in self._feeds)
+        feeds: Dict[str, FeedResult] = {}
+        total_mllm = 0
+        for fs in self._feeds:
+            n = frames_by_feed[fs.name]
+            per_query: Dict[str, RunResult] = {}
+            used: set = set()
+            feed_mllm = 0
+            for gi, g in enumerate(fs.groups):
+                prefix_start, tail_starts = mllm_start[fs.name][gi]
+                prefix_mllm = mllm_frames_of(g.exe.prefix) - prefix_start
+                tail_mllms = [mllm_frames_of(t) - s
+                              for t, s in zip(g.exe.tails, tail_starts)]
+                feed_mllm += prefix_mllm + sum(tail_mllms)
+                for qi, qid in enumerate(g.exe.queries):
+                    tail = g.exe.tails[qi]
+                    key = qid
+                    k = 1
+                    while key in used:           # same qid in two groups
+                        key = f"{qid}#{k}"
+                        k += 1
+                    used.add(key)
+                    q_counts = dict(g.pcounts)
+                    q_counts.update(g.counts[qi])
+                    # amortized sharing convention (as MultiQueryRuntime):
+                    # per-query fps is the aggregate query-frames/s every
+                    # query experiences, and per-query walls — weighted by
+                    # each query's frame budget — sum to the shared wall
+                    per_query[key] = RunResult(
+                        fps=total_qframes / wall,
+                        wall_s=wall * n / max(total_qframes, 1),
+                        n_frames=n,
+                        outputs=tail[-1].collected,
+                        window_results=g.windows[qi],
+                        op_input_counts=q_counts,
+                        mllm_frames=prefix_mllm + tail_mllms[qi],
+                        labels=fs.labels,
+                    )
+            total_mllm += feed_mllm
+            feeds[fs.name] = FeedResult(
+                name=fs.name, n_frames=n, mllm_frames=feed_mllm,
+                per_query=per_query,
+                plan=self.forests[fs.name].describe(),
+            )
+        return MultiStreamResult(
+            fps=total_qframes / wall,
+            wall_s=wall,
+            n_feeds=len(self._feeds),
+            n_queries=total_q,
+            mllm_frames=total_mllm,
+            server_stats=dict(self.server.stats),
+            feeds=feeds,
+        )

@@ -1,0 +1,196 @@
+"""Cost-based sharing-tree planner over multi-query (and multi-stream)
+plan sets.
+
+``repro.core.multiquery.factor_plans`` factors the single longest common
+prefix across *all* submitted plans — exactly right when every query runs
+the same preprocessing on the same stream, useless when one plan carries a
+``Skip`` the others lack, or when the workload mixes streams (the global
+common prefix is then empty).  This planner builds a sharing *tree*
+instead:
+
+    stream                        (root: one branch per source stream)
+    ├─ <signature prefix A> ──  group {Q5', Q6'}   shared (Δcost > 0)
+    └─ <signature prefix B> ──  group {Q2, Q8}     shared (union extract)
+
+Plans are grouped by ``core.multiquery.share_key`` — the ``Op.signature()``
+chain of every op before the first MLLM extract plus the extract's physical
+merge key — so each group factors through a *merged union-task* extract.
+A per-frame model-load cost estimate then chooses, per group, between
+shared and independent execution: sharing a group of k plans saves
+(k-1) × (prefix + extract) cost and gains nothing when the shared prefix is
+free, so groups whose estimated saving does not clear ``min_saving_us``
+are split back into independent singletons.
+
+The cost estimate is deliberately simple (static per-op defaults,
+calibrated ``op.cost_us`` when present, selectivity ignored); it is the
+hook where measured operator costs from the super-optimizer's calibration
+pass plug in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.core.multiquery import SharedExecution, factor_plans, share_key
+from repro.streaming.operators import MLLMExtractOp, Op, SourceOp
+from repro.streaming.plan import Plan
+
+#: static per-frame cost defaults (µs) when an op carries no calibrated
+#: ``cost_us`` — relative magnitudes matter, not absolutes: extracts are
+#: orders of magnitude above the cheap semantic/relational ops
+MODEL_COST_US: Dict[str, float] = {
+    "big": 1200.0,
+    "small": 220.0,
+    "pruned": 600.0,
+    "adaptive": 900.0,
+}
+
+OP_COST_US: Dict[str, float] = {
+    "SourceOp": 0.0,
+    "SinkOp": 1.0,
+    "SkipOp": 30.0,
+    "CropOp": 5.0,
+    "DownscaleOp": 20.0,
+    "GreyscaleOp": 15.0,
+    "FusedPreprocessOp": 40.0,
+    "CheapColorFilterOp": 60.0,
+    "DetectOp": 400.0,
+    "FilterOp": 5.0,
+    "WindowAggOp": 10.0,
+}
+
+
+def op_cost_us(op: Op) -> float:
+    """Estimated per-input-frame cost: calibrated if available, else the
+    static default for the op class."""
+    if op.cost_us > 0:
+        return op.cost_us
+    if isinstance(op, MLLMExtractOp):
+        return MODEL_COST_US.get(op.model, MODEL_COST_US["big"])
+    return OP_COST_US.get(type(op).__name__, 10.0)
+
+
+def chain_cost_us(ops: List[Op]) -> float:
+    return sum(op_cost_us(op) for op in ops)
+
+
+@dataclasses.dataclass
+class SharingGroup:
+    """One leaf of the sharing tree: a factored multi-query execution plus
+    the cost estimate that justified (or rejected) sharing it."""
+
+    execution: SharedExecution
+    #: estimated per-frame cost of the shared execution (prefix once +
+    #: every tail) vs running each member plan independently
+    shared_cost_us: float
+    indep_cost_us: float
+
+    @property
+    def n_queries(self) -> int:
+        return len(self.execution.queries)
+
+    @property
+    def saving_us(self) -> float:
+        return self.indep_cost_us - self.shared_cost_us
+
+    @property
+    def is_shared(self) -> bool:
+        return self.n_queries > 1
+
+
+@dataclasses.dataclass
+class SharingForest:
+    """The planner's output: per-stream lists of sharing groups (the tree:
+    stream root -> signature-prefix branch -> group leaf)."""
+
+    streams: Dict[str, List[SharingGroup]]
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+    def groups(self) -> List[SharingGroup]:
+        return [g for gs in self.streams.values() for g in gs]
+
+    @property
+    def n_queries(self) -> int:
+        return sum(g.n_queries for g in self.groups())
+
+    def describe(self) -> str:
+        lines: List[str] = []
+        for stream, groups in self.streams.items():
+            lines.append(stream)
+            for i, g in enumerate(groups):
+                elbow = "└─" if i == len(groups) - 1 else "├─"
+                head = " -> ".join(op.name for op in g.execution.prefix)
+                qs = ",".join(g.execution.queries)
+                tag = (f"shared Δ{g.saving_us:.0f}µs/frame"
+                       if g.is_shared else "independent")
+                lines.append(f"  {elbow} {head}  {{{qs}}}  [{tag}]")
+        return "\n".join(lines)
+
+
+class SharingTreePlanner:
+    """Group N plans (possibly over several streams) into a sharing forest.
+
+    ``min_saving_us`` is the sharing threshold: a candidate group is kept
+    shared only if its estimated per-frame saving strictly exceeds it —
+    raise it to bias toward independent execution (e.g. when per-query
+    isolation matters more than model load)."""
+
+    def __init__(self, min_saving_us: float = 0.0):
+        self.min_saving_us = min_saving_us
+
+    # ------------------------------------------------------------------
+    def _group(self, plans: List[Plan]) -> SharingGroup:
+        exe = factor_plans(plans)
+        shared = chain_cost_us(exe.prefix) + sum(
+            chain_cost_us(tail) for tail in exe.tails)
+        indep = sum(chain_cost_us(p.ops) for p in plans)
+        return SharingGroup(execution=exe, shared_cost_us=shared,
+                            indep_cost_us=indep)
+
+    def plan(self, plans: List[Plan]) -> SharingForest:
+        assert plans, "need at least one plan"
+        for p in plans:
+            assert isinstance(p.ops[0], SourceOp), \
+                f"plan {p.query!r} does not start at a Source"
+
+        by_stream: Dict[str, List[Plan]] = {}
+        for p in plans:
+            by_stream.setdefault(p.ops[0].stream_name, []).append(p)
+
+        notes: List[str] = []
+        if len(by_stream) > 1:
+            notes.append(
+                f"{len(by_stream)} source streams -> global common prefix "
+                "is empty; sharing within per-stream subsets only")
+
+        streams: Dict[str, List[SharingGroup]] = {}
+        for stream, splans in by_stream.items():
+            candidates: Dict[Tuple, List[Plan]] = {}
+            for p in splans:
+                candidates.setdefault(share_key(p), []).append(p)
+            groups: List[SharingGroup] = []
+            for key, members in candidates.items():
+                if len(members) == 1:
+                    groups.append(self._group(members))
+                    continue
+                g = self._group(members)
+                if g.saving_us > self.min_saving_us:
+                    groups.append(g)
+                    notes.append(
+                        f"{stream}: share {{{','.join(g.execution.queries)}}}"
+                        f" (Δ{g.saving_us:.0f}µs/frame)")
+                else:
+                    notes.append(
+                        f"{stream}: sharing {{{','.join(p.query or '?' for p in members)}}}"
+                        f" saves only {g.saving_us:.0f}µs/frame "
+                        f"<= {self.min_saving_us:.0f} -> independent")
+                    groups.extend(self._group([m]) for m in members)
+            # deterministic order: largest sharing opportunity first
+            groups.sort(key=lambda g: (-g.n_queries, g.execution.queries))
+            streams[stream] = groups
+        forest = SharingForest(streams=streams, notes=notes)
+        forest.notes.append(
+            f"{forest.n_queries} queries -> "
+            f"{len(forest.groups())} execution groups over "
+            f"{len(streams)} stream(s)")
+        return forest

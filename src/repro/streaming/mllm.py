@@ -179,6 +179,46 @@ class StreamMLLM:
         }
 
 
+def variant_models(ctx) -> Dict[str, Tuple["StreamMLLM", Any]]:
+    """Physical-variant name -> (model, params) from an OpContext — THE
+    resolution table, shared by ``MLLMExtractOp.open`` and the
+    ``SharedExtractServer`` so the solo path and the server can never run
+    different weights for the same variant string ("adaptive" is not a
+    physical variant: the op's density tracker resolves it to big/pruned
+    before any forward)."""
+    return {
+        "big": (ctx.mllm, ctx.mllm_params),
+        "small": (ctx.mllm_small, ctx.mllm_small_params),
+        "pruned": (ctx.mllm, ctx.mllm_pruned_params),
+    }
+
+
+def make_extract_fn(mllm: StreamMLLM, params):
+    """Jitted batched union extract: frames -> argmax prediction per task.
+
+    One forward computes *every* head (the union of any task subset costs
+    the same as a single task), so callers serving heterogeneous task sets
+    simply read the attributes they asked for.  Normalization is decided
+    **per frame** (raw uint8-range vs already-normalized), not from the
+    batch max: the SharedExtractServer coalesces frames from several
+    streams — possibly at different preprocessing stages — into one padded
+    forward, and each row must come out bitwise identical to a solo run.
+    Zero padding rows classify as "normalized" and are sliced off by the
+    caller, so they never perturb real rows.
+    """
+
+    @jax.jit
+    def run(frames):
+        x = frames.astype(jnp.float32)
+        raw = x.reshape(x.shape[0], -1).max(axis=1) > 8.0
+        x = jnp.where(raw[:, None, None, None],
+                      (x / 255.0 - 0.5) / 0.25, x)
+        out = mllm.forward(params, x)
+        return {k: jnp.argmax(v, -1) for k, v in out.items()}
+
+    return run
+
+
 def distill_loss(student: StreamMLLM, teacher_out: Dict[str, jax.Array],
                  params, frames, temperature: float = 2.0) -> jax.Array:
     """Soft-label multi-head distillation (physical optimization)."""

@@ -13,6 +13,11 @@ throughput and the total MLLM frame count — the sharing claim is
 ``mllm_frames(shared) < sum_q mllm_frames(independent_q)`` with per-query
 outputs bitwise identical.
 
+Per-query tails are independent (each owns its operator instances and its
+accumulators), so the fan-out dispatches them on a process-wide thread pool;
+the relational tails are cheap today, but tails that grow models of their
+own overlap their device work this way.
+
 Fault tolerance mirrors ``StreamRuntime``: an aligned snapshot captures the
 source offset + every prefix and tail operator's state, and the first
 ``run()`` after ``restore()`` suppresses the warmup reset so the restored
@@ -22,11 +27,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional
 
 from repro.streaming.operators import (
     Batch,
-    MLLMExtractOp,
     Op,
     OpContext,
     SinkOp,
@@ -34,10 +39,78 @@ from repro.streaming.operators import (
 from repro.streaming.plan import Plan
 from repro.streaming.runtime import (
     RunResult,
+    RunScaffold,
     drive_stream,
     flush_ops,
-    warmup_ops,
+    mllm_frames_of,
 )
+
+#: one process-wide pool shared by every fan-out (runtimes come and go per
+#: benchmark run; a per-runtime pool would leak idle threads)
+_FANOUT_POOL: Optional[ThreadPoolExecutor] = None
+_FANOUT_WORKERS = 8
+
+
+def _fanout_pool() -> ThreadPoolExecutor:
+    global _FANOUT_POOL
+    if _FANOUT_POOL is None:
+        _FANOUT_POOL = ThreadPoolExecutor(
+            max_workers=_FANOUT_WORKERS, thread_name_prefix="fanout")
+    return _FANOUT_POOL
+
+
+def fan_out_tails(tails: List[List[Op]], batch: Batch,
+                  counts: List[Dict[str, int]],
+                  windows: List[List[Dict[str, Any]]],
+                  parallel: bool = True) -> None:
+    """Push one fully-advanced prefix batch through every per-query tail.
+
+    Each tail owns its op instances and writes only its own ``counts[qi]``
+    / ``windows[qi]`` slot, and operators copy-on-write the shared batch
+    dict — so the tails are embarrassingly parallel.  ``parallel=False``
+    keeps the sequential loop (single tail, or debugging).
+    """
+    def one(qi: int) -> None:
+        b = batch
+        for op in tails[qi]:
+            counts[qi][op.name] += len(b["idx"])
+            b = op.process(b)
+            if "window_results" in b:
+                windows[qi].extend(b.pop("window_results"))
+
+    if not parallel or len(tails) <= 1:
+        for qi in range(len(tails)):
+            one(qi)
+    else:
+        # list() propagates the first tail exception to the caller
+        list(_fanout_pool().map(one, range(len(tails))))
+
+
+def broadcast_windows(batch: Batch,
+                      windows: List[List[Dict[str, Any]]]) -> Batch:
+    """Pop window results emitted by a *shared prefix* op and append them
+    to every query's accumulator — a window op shared by every query
+    produces results that belong to all of them.  One implementation for
+    every shared executor, so the broadcast semantics cannot drift."""
+    if "window_results" in batch:
+        wr = batch.pop("window_results")
+        for w in windows:
+            w.extend(wr)
+    return batch
+
+
+def flush_shared(prefix: List[Op], tails: List[List[Op]],
+                 windows: List[List[Dict[str, Any]]], fan_out) -> None:
+    """End-of-stream flush for a shared prefix + per-query tails: prefix
+    partials broadcast to every query and fan out through the tails, then
+    each tail flushes into its own accumulator."""
+    def emit_all(wr):
+        for w in windows:
+            w.extend(wr)
+
+    flush_ops(prefix, emit_all, terminal=fan_out)
+    for qi, tail in enumerate(tails):
+        flush_ops(tail, windows[qi].extend)
 
 
 @dataclasses.dataclass
@@ -57,21 +130,17 @@ class MultiQueryResult:
     per_query: Dict[str, RunResult]
 
 
-class MultiQueryRuntime:
+class MultiQueryRuntime(RunScaffold):
     def __init__(self, plans: List[Plan], ctx: OpContext,
-                 micro_batch: int = 16):
+                 micro_batch: int = 16, parallel_tails: bool = True):
         # local import: repro.core pulls in the whole optimizer stack
         from repro.core.multiquery import factor_plans
 
         self.shared = factor_plans(plans)
-        self.ctx = dataclasses.replace(ctx, micro_batch=micro_batch)
-        self.micro_batch = micro_batch
-        for op in self._all_ops():
-            op.open(self.ctx)
+        self.parallel_tails = parallel_tails
+        self._init_scaffold(ctx, micro_batch, self._all_ops())
         for tail in self.shared.tails:
             assert isinstance(tail[-1], SinkOp), "tails must end in a Sink"
-        self._source_index = 0
-        self._restored = False
 
     def _all_ops(self) -> List[Op]:
         ops = list(self.shared.prefix)
@@ -95,44 +164,26 @@ class MultiQueryRuntime:
         for tail, states in zip(self.shared.tails, st["tails"]):
             for op, s in zip(tail, states):
                 op.restore(s)
-        # the next run() must not warmup-reset the restored state
-        self._restored = True
+        self._mark_restored()
 
     # ------------------------------------------------------------------
     def _fan_out(self, batch: Batch, counts: List[Dict[str, int]],
                  windows: List[List[Dict[str, Any]]]) -> None:
-        for qi, tail in enumerate(self.shared.tails):
-            b = batch
-            for op in tail:
-                counts[qi][op.name] += len(b["idx"])
-                b = op.process(b)
-                if "window_results" in b:
-                    windows[qi].extend(b.pop("window_results"))
+        fan_out_tails(self.shared.tails, batch, counts, windows,
+                      parallel=self.parallel_tails)
 
     def _advance(self, batch: Batch, pcounts: Dict[str, int],
                  counts: List[Dict[str, int]],
                  windows: List[List[Dict[str, Any]]]) -> None:
         for op in self.shared.prefix:
             pcounts[op.name] += len(batch["idx"])
-            batch = op.process(batch)
-            if "window_results" in batch:
-                # a window op shared by every query: results belong to all
-                wr = batch.pop("window_results")
-                for w in windows:
-                    w.extend(wr)
+            batch = broadcast_windows(op.process(batch), windows)
         self._fan_out(batch, counts, windows)
 
     def _flush(self, counts: List[Dict[str, int]],
                windows: List[List[Dict[str, Any]]]) -> None:
-        def emit_all(wr):
-            # a shared window op's results belong to every query
-            for w in windows:
-                w.extend(wr)
-
-        flush_ops(self.shared.prefix, emit_all,
-                  terminal=lambda b: self._fan_out(b, counts, windows))
-        for qi, tail in enumerate(self.shared.tails):
-            flush_ops(tail, windows[qi].extend)
+        flush_shared(self.shared.prefix, self.shared.tails, windows,
+                     lambda b: self._fan_out(b, counts, windows))
 
     # ------------------------------------------------------------------
     def run(self, stream, n_frames: int, warmup: int = 1,
@@ -146,28 +197,19 @@ class MultiQueryRuntime:
         windows: List[List[Dict[str, Any]]] = [[] for _ in self.shared.tails]
         labels_all: List[Dict[str, Any]] = []
 
-        if warmup and not self._restored:
+        def warm_advance(batch):
             # throwaway accumulators; SinkOp.reset() drops warmup records
-            warmup_ops(
-                stream, self.micro_batch,
-                lambda b: self._advance(b, dict(pcounts),
-                                        [dict(c) for c in counts],
-                                        [[] for _ in windows]),
-                self._all_ops())
-            self._source_index = 0
-        self._restored = False
-        # per-run (not lifetime) model load, as in StreamRuntime.run
-        prefix_mllm_start = sum(
-            op.frames_processed for op in self.shared.prefix
-            if isinstance(op, MLLMExtractOp))
-        tail_mllm_start = [
-            sum(op.frames_processed for op in tail
-                if isinstance(op, MLLMExtractOp))
-            for tail in self.shared.tails]
+            self._advance(batch, dict(pcounts), [dict(c) for c in counts],
+                          [[] for _ in windows])
+
+        self._begin_run(stream, warmup, warm_advance, self._all_ops())
+        # per-run (not lifetime) model load, per prefix/tail component
+        prefix_mllm_start = mllm_frames_of(self.shared.prefix)
+        tail_mllm_start = [mllm_frames_of(tail)
+                           for tail in self.shared.tails]
 
         def advance(batch):
-            # per-micro-batch checkpoint offset, as in StreamRuntime.run
-            self._source_index = int(batch["idx"][-1]) + 1
+            self._stamp(batch)
             self._advance(batch, pcounts, counts, windows)
 
         t0 = time.perf_counter()
@@ -178,16 +220,12 @@ class MultiQueryRuntime:
         wall = time.perf_counter() - t0
 
         n_q = len(self.shared.tails)
-        prefix_mllm = sum(op.frames_processed for op in self.shared.prefix
-                          if isinstance(op, MLLMExtractOp)) \
-            - prefix_mllm_start
+        prefix_mllm = mllm_frames_of(self.shared.prefix) - prefix_mllm_start
         per_query: Dict[str, RunResult] = {}
         total_mllm = prefix_mllm
         for qi, (qid, tail) in enumerate(zip(self.shared.queries,
                                              self.shared.tails)):
-            tail_mllm = sum(op.frames_processed for op in tail
-                            if isinstance(op, MLLMExtractOp)) \
-                - tail_mllm_start[qi]
+            tail_mllm = mllm_frames_of(tail) - tail_mllm_start[qi]
             total_mllm += tail_mllm
             q_counts = dict(pcounts)
             q_counts.update(counts[qi])

@@ -25,7 +25,8 @@ from repro.data.tollbooth import BRANDS, COLORS, COLOR_RGB, PLATE_CHARS
 from repro.data.volleyball import ACTIONS
 from repro.kernels.frame_diff.ops import frame_diff
 from repro.kernels.fused_preprocess.ops import fused_preprocess
-from repro.streaming.mllm import MLLM_TASKS, PLATE_LEN, StreamMLLM
+from repro.streaming.mllm import (MLLM_TASKS, PLATE_LEN, StreamMLLM,
+                                  make_extract_fn, variant_models)
 
 Batch = Dict[str, Any]
 
@@ -379,50 +380,44 @@ class MLLMExtractOp(Op):
     def __post_init__(self):
         self.name = f"mllm[{self.model}:{','.join(self.tasks)}]"
         self.frames_processed = 0
+        self.forwards = 0            # jitted extract invocations this run
         self._density_ema = 0.5
-
-    def _make_run(self, mllm, params):
-        @jax.jit
-        def run(frames):
-            x = frames.astype(jnp.float32)
-            x = jnp.where(x.max() > 8.0, (x / 255.0 - 0.5) / 0.25, x)
-            out = mllm.forward(params, x)
-            return {k: jnp.argmax(v, -1) for k, v in out.items()}
-
-        return run
 
     def open(self, ctx: OpContext) -> None:
         self._micro_batch_hint = ctx.micro_batch
-        if self.model == "small":
-            self._run = self._make_run(ctx.mllm_small, ctx.mllm_small_params)
-        elif self.model == "pruned":
-            self._run = self._make_run(ctx.mllm, ctx.mllm_pruned_params)
-        elif self.model == "adaptive":
-            self._run_big = self._make_run(ctx.mllm, ctx.mllm_params)
-            self._run_pruned = self._make_run(ctx.mllm,
-                                              ctx.mllm_pruned_params)
-            self._run = None
-        else:
-            self._run = self._make_run(ctx.mllm, ctx.mllm_params)
+        # jax.jit is lazy, so building both adaptive variants (or a variant
+        # the SharedExtractServer route never invokes) costs nothing until
+        # the first solo process() call actually traces it
+        variants = variant_models(ctx)
+        wanted = ("big", "pruned") if self.model == "adaptive" \
+            else (self.model,)
+        self._runs = {v: make_extract_fn(*variants[v]) for v in wanted}
 
-    def process(self, batch: Batch) -> Batch:
-        n = batch["frames"].shape[0]
-        if n == 0:
-            return batch
+    def resolve_variant(self, n: int) -> str:
+        """Pick the physical variant for a batch of ``n`` surviving frames.
+
+        For model="adaptive" this *advances* the density EMA (the paper's
+        adaptive pruning: aggressive pruning is safe in low-traffic
+        periods) — call exactly once per processed batch."""
+        if self.model != "adaptive":
+            return self.model
+        density = n / max(self._micro_batch_hint, 1)
+        self._density_ema = 0.8 * self._density_ema + 0.2 * density
+        return "big" if self._density_ema >= self.density_threshold \
+            else "pruned"
+
+    def begin_extract(self, n: int) -> str:
+        """Account ``n`` frames of model load and resolve the variant —
+        the shared half of process(); the SharedExtractServer route calls
+        this then ships the un-padded frames to the server instead of
+        running the op's own jitted program."""
         self.frames_processed += n
-        bucket = _bucket_pad(n)
-        frames = batch["frames"]
-        if bucket != n:
-            pad = np.zeros((bucket - n,) + frames.shape[1:], frames.dtype)
-            frames = np.concatenate([frames, pad], 0)
-        if self.model == "adaptive":
-            density = n / max(self._micro_batch_hint, 1)
-            self._density_ema = 0.8 * self._density_ema + 0.2 * density
-            run = self._run_big if self._density_ema >= \
-                self.density_threshold else self._run_pruned
-        else:
-            run = self._run
-        preds = run(jnp.asarray(frames))
+        return self.resolve_variant(n)
+
+    def apply_preds(self, batch: Batch, preds: Dict[str, Any],
+                    n: int) -> Batch:
+        """Merge per-task predictions (first ``n`` rows are real) into the
+        batch's attrs — shared by the solo and the server-routed path."""
         batch = dict(batch)
         attrs = dict(batch.get("attrs", {}))
         for k, v in preds.items():
@@ -430,16 +425,33 @@ class MLLMExtractOp(Op):
         batch["attrs"] = attrs
         return batch
 
+    def process(self, batch: Batch) -> Batch:
+        n = batch["frames"].shape[0]
+        if n == 0:
+            return batch
+        variant = self.begin_extract(n)
+        bucket = _bucket_pad(n)
+        frames = batch["frames"]
+        if bucket != n:
+            pad = np.zeros((bucket - n,) + frames.shape[1:], frames.dtype)
+            frames = np.concatenate([frames, pad], 0)
+        self.forwards += 1
+        preds = self._runs[variant](jnp.asarray(frames))
+        return self.apply_preds(batch, preds, n)
+
     def reset(self):
         self.frames_processed = 0
+        self.forwards = 0
         self._density_ema = 0.5
 
     def snapshot(self):
         return {"frames_processed": self.frames_processed,
+                "forwards": self.forwards,
                 "density_ema": self._density_ema}
 
     def restore(self, st):
         self.frames_processed = st["frames_processed"]
+        self.forwards = st.get("forwards", 0)
         self._density_ema = st.get("density_ema", 0.5)
 
 

@@ -61,6 +61,53 @@ def warmup_ops(stream, micro_batch: int, advance, ops: List[Op]) -> None:
         op.reset()
 
 
+def mllm_frames_of(ops: List[Op]) -> int:
+    """Lifetime MLLM model load of an op chain (frames through extracts)."""
+    return sum(op.frames_processed for op in ops
+               if isinstance(op, MLLMExtractOp))
+
+
+class RunScaffold:
+    """Run-lifecycle bookkeeping shared by every executor (StreamRuntime,
+    MultiQueryRuntime, and the multi-stream group executors).
+
+    One implementation of the three pieces that used to be duplicated and
+    could drift: (1) warmup suppression after restore() — the first run on
+    restored state must not warmup-reset it; (2) per-run (not lifetime)
+    ``mllm_frames`` reporting — ``frames_processed`` accumulates across
+    resumed segments, so runs diff against a baseline taken at run start;
+    (3) per-micro-batch source-index advance, so a snapshot taken after a
+    mid-run failure stays aligned with operator state.
+    """
+
+    def _init_scaffold(self, ctx: OpContext, micro_batch: int,
+                       ops: List[Op]) -> None:
+        self.ctx = dataclasses.replace(ctx, micro_batch=micro_batch)
+        self.micro_batch = micro_batch
+        for op in ops:
+            op.open(self.ctx)
+        self._source_index = 0
+        self._restored = False
+
+    def _mark_restored(self) -> None:
+        """The next run() must not warmup-reset the restored state."""
+        self._restored = True
+
+    def _begin_run(self, stream, warmup: int, advance, ops: List[Op],
+                   ) -> int:
+        """Warmup (unless suppressed by a preceding restore) and return the
+        run's MLLM model-load baseline over ``ops``."""
+        if warmup and not self._restored:
+            warmup_ops(stream, self.micro_batch, advance, ops)
+            self._source_index = 0
+        self._restored = False
+        return mllm_frames_of(ops)
+
+    def _stamp(self, batch: Dict[str, Any]) -> None:
+        """Advance the checkpoint offset past this micro-batch."""
+        self._source_index = int(batch["idx"][-1]) + 1
+
+
 def drive_stream(stream, n_frames: int, micro_batch: int, base: int,
                  advance, labels_all: List[Dict[str, Any]]) -> int:
     """The measured driver loop: pull micro-batches, stamp absolute frame
@@ -96,15 +143,10 @@ def flush_ops(ops: List[Op], emit, terminal=None) -> None:
             terminal(fb)
 
 
-class StreamRuntime:
+class StreamRuntime(RunScaffold):
     def __init__(self, plan: Plan, ctx: OpContext, micro_batch: int = 16):
         self.plan = plan
-        self.ctx = dataclasses.replace(ctx, micro_batch=micro_batch)
-        self.micro_batch = micro_batch
-        for op in plan.ops:
-            op.open(self.ctx)
-        self._source_index = 0
-        self._restored = False
+        self._init_scaffold(ctx, micro_batch, plan.ops)
 
     # ------------------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
@@ -117,18 +159,9 @@ class StreamRuntime:
         self._source_index = st["source_index"]
         for op, s in zip(self.plan.ops, st["ops"]):
             op.restore(s)
-        # the next run() must not warmup-reset the restored state
-        self._restored = True
+        self._mark_restored()
 
     # ------------------------------------------------------------------
-    def _warmup(self, stream) -> None:
-        def advance(batch):
-            for op in self.plan.ops:
-                batch = op.process(batch)
-
-        warmup_ops(stream, self.micro_batch, advance, self.plan.ops)
-        self._source_index = 0
-
     def run(self, stream, n_frames: int, warmup: int = 1,
             flush: bool = True) -> RunResult:
         """``warmup=1`` (default) makes this a *fresh* measurement: the
@@ -142,18 +175,15 @@ class StreamRuntime:
         window_results: List[Dict[str, Any]] = []
         labels_all: List[Dict[str, Any]] = []
 
-        if warmup and not self._restored:
-            self._warmup(stream)
-        self._restored = False
-        # report per-run (not lifetime) model load: frames_processed keeps
-        # accumulating across resumed segments, so diff against the start
-        mllm_start = sum(op.frames_processed for op in self.plan.ops
-                         if isinstance(op, MLLMExtractOp))
+        def warm_advance(batch):
+            for op in self.plan.ops:
+                batch = op.process(batch)
+
+        mllm_start = self._begin_run(stream, warmup, warm_advance,
+                                     self.plan.ops)
 
         def advance(batch):
-            # advance the checkpoint offset per micro-batch so a snapshot
-            # taken after a mid-run failure stays aligned with op state
-            self._source_index = int(batch["idx"][-1]) + 1
+            self._stamp(batch)
             for op in self.plan.ops:
                 counts[op.name] += len(batch["idx"])
                 batch = op.process(batch)
@@ -167,8 +197,7 @@ class StreamRuntime:
             flush_ops(self.plan.ops, window_results.extend)
         wall = time.perf_counter() - t0
 
-        mllm_frames = sum(op.frames_processed for op in self.plan.ops
-                          if isinstance(op, MLLMExtractOp)) - mllm_start
+        mllm_frames = mllm_frames_of(self.plan.ops) - mllm_start
         return RunResult(
             fps=n_frames / wall,
             wall_s=wall,

@@ -1,0 +1,17 @@
+"""Shared fixtures.
+
+``stream_ctx`` trains the tiny stream operator models ONCE per session —
+test modules that need an OpContext (scheduler, property tests) depend on
+it instead of training their own copy, which would double the dominant
+fixture cost of the slow tier.
+"""
+import pytest
+
+
+@pytest.fixture(scope="session")
+def stream_ctx():
+    # tiny training: enough for the plumbing; accuracy is benchmarks' job
+    from repro.streaming.pretrain import train_stream_models
+
+    return train_stream_models(steps_mllm=40, steps_small=20, steps_det=30,
+                               cache_dir=None, verbose=False)

@@ -119,3 +119,57 @@ def test_logical_rules_never_reference_missing_axes(axis, multipod):
             continue
         names = entry if isinstance(entry, tuple) else (entry,)
         assert all(nm in mesh.axis_names for nm in names)
+
+
+# ---------------------------------------------------------------------------
+# sharing-tree planner properties (the scheduler subsystem)
+# ---------------------------------------------------------------------------
+
+ALL_QIDS = None  # populated lazily: repro.queries pulls in the model stack
+
+
+def _catalog():
+    global ALL_QIDS
+    if ALL_QIDS is None:
+        from repro.queries import QUERIES
+        ALL_QIDS = sorted(QUERIES)
+    return ALL_QIDS
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_sharing_tree_partitions_exactly_once(data):
+    """Model-free planner invariant: every submitted query lands in exactly
+    one sharing group, groups never mix streams, and a shared group's
+    estimated saving is positive."""
+    from repro.queries import QUERIES, get_query
+    from repro.scheduler import SharingTreePlanner
+
+    qids = data.draw(st.lists(st.sampled_from(_catalog()), min_size=1,
+                              max_size=8, unique=True))
+    forest = SharingTreePlanner().plan(
+        [get_query(q).naive_plan() for q in qids])
+    placed = sorted(q for g in forest.groups() for q in g.execution.queries)
+    assert placed == sorted(qids)
+    for stream, groups in forest.streams.items():
+        for g in groups:
+            assert g.execution.prefix[0].stream_name == stream
+            assert {QUERIES[q].dataset
+                    for q in g.execution.queries} == {stream}
+            if g.is_shared:
+                assert g.saving_us > 0
+
+
+@pytest.mark.slow
+@given(data=st.data())
+@settings(max_examples=5, deadline=None)
+def test_sharing_tree_execution_equals_independent(stream_ctx, data):
+    """Random catalog subsets — including mixed tollbooth+volleyball
+    subsets whose global common prefix is empty — execute through the
+    sharing tree bitwise-identically to N independent runs."""
+    from test_scheduler import assert_sharing_tree_equals_independent
+
+    qids = data.draw(st.lists(st.sampled_from(_catalog()), min_size=1,
+                              max_size=4, unique=True))
+    seed = data.draw(st.integers(0, 2**16 - 1))
+    assert_sharing_tree_equals_independent(stream_ctx, qids, seed)
