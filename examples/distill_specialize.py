@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.data import TollBoothStream
 from repro.streaming.pretrain import (CROP, encode_tollbooth_labels,
-                                      preprocess_np, train_stream_models)
+                                      preprocess_np, stream_models)
 
 
 def measure(mllm, params, frames, enc):
@@ -40,9 +40,13 @@ def measure(mllm, params, frames, enc):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=96)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny models + short workload: smoke-run in seconds")
     args = ap.parse_args()
 
-    ctx = train_stream_models(verbose=True)  # includes the distilled small
+    if args.quick:
+        args.frames = min(args.frames, 32)
+    ctx = stream_models(quick=args.quick)  # incl. the distilled small
 
     tb = TollBoothStream(seed=4242, car_rate=0.05)
     frames_raw, labels = tb.batch(args.frames)

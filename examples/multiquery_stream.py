@@ -8,14 +8,14 @@ in a single pass over the frames.  Compares against N independent
 one model invocation per surviving frame instead of N.
 
   PYTHONPATH=src python examples/multiquery_stream.py \
-      [--dataset tollbooth|volleyball] [--frames 512]
+      [--dataset tollbooth|volleyball] [--frames 512] [--quick]
 """
 import argparse
 
 from repro.data import TollBoothStream, VolleyballStream
 from repro.queries import QUERIES, get_query
 from repro.streaming import MultiQueryRuntime, StreamRuntime
-from repro.streaming.pretrain import train_stream_models
+from repro.streaming.pretrain import stream_models
 
 
 def main() -> None:
@@ -24,10 +24,13 @@ def main() -> None:
                     choices=("tollbooth", "volleyball"))
     ap.add_argument("--frames", type=int, default=512)
     ap.add_argument("--eval-seed", type=int, default=999)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny models + short streams: smoke-run in seconds")
     args = ap.parse_args()
 
-    print("loading/training stream operator models (cached after first run)…")
-    ctx = train_stream_models(verbose=True)
+    if args.quick:
+        args.frames = min(args.frames, 64)
+    ctx = stream_models(quick=args.quick)
 
     if args.dataset == "tollbooth":
         make_stream = lambda: TollBoothStream(seed=args.eval_seed)  # noqa

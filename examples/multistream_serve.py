@@ -19,7 +19,7 @@ from repro.data import TollBoothStream, VolleyballStream
 from repro.queries import get_query
 from repro.scheduler import Feed, MultiStreamRuntime, SharingTreePlanner
 from repro.streaming import MLLMExtractOp, StreamRuntime
-from repro.streaming.pretrain import train_stream_models
+from repro.streaming.pretrain import stream_models
 
 FEEDS = (
     ("tb-north", "tollbooth", 1234, ("Q2", "Q6", "Q8")),
@@ -39,10 +39,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=256,
                     help="frames per feed")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny models + short streams: smoke-run in seconds")
     args = ap.parse_args()
 
-    print("loading/training stream operator models (cached after first run)…")
-    ctx = train_stream_models(verbose=True)
+    if args.quick:
+        args.frames = min(args.frames, 48)
+    ctx = stream_models(quick=args.quick)
 
     print("\n=== sharing tree over the full workload "
           "(global common prefix: empty) ===")

@@ -21,7 +21,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="chatglm3-6b", choices=list_archs())
     ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer training steps: smoke-run in seconds")
     args = ap.parse_args()
+    if args.quick:
+        args.steps = min(args.steps, 30)
 
     cfg = smoke_config(args.arch)
     print(f"arch={args.arch} (reduced config: {cfg.n_layers}L "

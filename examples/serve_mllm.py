@@ -22,7 +22,12 @@ def main() -> None:
     ap.add_argument("--arch", default="gemma2-2b", choices=list_archs())
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=10)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer, shorter requests: smoke-run in seconds")
     args = ap.parse_args()
+    if args.quick:
+        args.requests = min(args.requests, 3)
+        args.max_new = min(args.max_new, 4)
 
     cfg = smoke_config(args.arch)
     if cfg.encoder_decoder:

@@ -7,13 +7,14 @@ optimization report, and compares naive vs optimized FPS + accuracy on a
 held-out stream.
 
   PYTHONPATH=src python examples/tollbooth_stream.py [--frames 512] [--query Q8]
+      [--quick]   # tiny un-cached models + short streams (CI smoke)
 """
 import argparse
 
 from repro.core.superopt import SuperOptimizer
 from repro.data import TollBoothStream, VolleyballStream
 from repro.queries import QUERIES, get_query
-from repro.streaming.pretrain import train_stream_models
+from repro.streaming.pretrain import stream_models
 from repro.streaming.runtime import StreamRuntime
 
 
@@ -22,10 +23,13 @@ def main() -> None:
     ap.add_argument("--query", default="Q8", choices=sorted(QUERIES))
     ap.add_argument("--frames", type=int, default=512)
     ap.add_argument("--eval-seed", type=int, default=999)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny models + short streams: smoke-run in seconds")
     args = ap.parse_args()
 
-    print("loading/training stream operator models (cached after first run)…")
-    ctx = train_stream_models(verbose=True)
+    if args.quick:
+        args.frames = min(args.frames, 64)
+    ctx = stream_models(quick=args.quick)
 
     query = get_query(args.query)
     if query.dataset == "tollbooth":
@@ -34,7 +38,7 @@ def main() -> None:
         stream_factory = lambda seed: VolleyballStream(seed=seed)  # noqa: E731
 
     print(f"\n=== optimizing {query.qid}: {query.description} ===")
-    opt = SuperOptimizer(ctx, val_frames=384)
+    opt = SuperOptimizer(ctx, val_frames=48 if args.quick else 384)
     plan, report = opt.optimize(query, stream_factory)
     print(report.describe())
 

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Smoke tier: the fast test suite plus a quick-mode run of every example.
+#
+#   scripts/smoke.sh              # everything
+#   scripts/smoke.sh tests        # tests only
+#   scripts/smoke.sh examples     # examples only
+#
+# Matches the CI workflow (.github/workflows/ci.yml); keep the two in sync.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+what="${1:-all}"
+
+if [[ "$what" == "all" || "$what" == "tests" ]]; then
+    echo "=== pytest -m 'not slow' ==="
+    python -m pytest -x -q -m "not slow"
+fi
+
+if [[ "$what" == "all" || "$what" == "examples" ]]; then
+    # every example must run to completion in quick mode
+    for ex in examples/*.py; do
+        echo "=== $ex --quick ==="
+        python "$ex" --quick
+    done
+fi
+
+echo "smoke OK"

@@ -1,5 +1,8 @@
 from repro.core.semantic import SceneKnowledge, SemanticOptimizer
 from repro.core.logical import LogicalOptimizer
 from repro.core.physical import PhysicalOptimizer, structured_prune
+from repro.core.phases import OptimizationPhase, PhaseContext
+from repro.core.costs import CostCatalog, CostEntry, op_cost_key
 from repro.core.superopt import SuperOptimizer, OptimizationReport
 from repro.core.multiquery import SharedExecution, factor_plans
+from repro.core.fleet import FleetOptimizer, FleetQuery, FleetResult

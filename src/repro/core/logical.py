@@ -48,8 +48,10 @@ RECONCILIATION = (
 )
 
 
-def _time_op(op, frames: np.ndarray, ctx: OpContext, reps: int = 3) -> float:
-    """Measured µs/frame for one operator on a sample batch."""
+def _time_op(op, frames: np.ndarray, ctx: OpContext, reps: int = 3,
+             catalog=None) -> float:
+    """Measured µs/frame for one operator on a sample batch; the sample
+    flows into ``catalog`` (a CostCatalog) when one is given."""
     batch = {"frames": frames, "idx": np.arange(frames.shape[0])}
     op.open(ctx)
     op.process(dict(batch))  # warmup/compile
@@ -57,15 +59,27 @@ def _time_op(op, frames: np.ndarray, ctx: OpContext, reps: int = 3) -> float:
     for _ in range(reps):
         op.process(dict(batch))
     dt = (time.perf_counter() - t0) / reps
-    return dt / frames.shape[0] * 1e6
+    us = dt / frames.shape[0] * 1e6
+    if catalog is not None:
+        # average cost (overhead folded in): a coarse estimate — the
+        # calibration pass's decomposed marginal+overhead fit outranks it
+        catalog.record_op(op, us, direct=False)
+    return us
 
 
 class LogicalOptimizer:
+    name = "logical"
+
     def __init__(self, ctx: OpContext):
         self.ctx = ctx
 
-    def optimize(self, plan: Plan, query, sample_frames: np.ndarray
-                 ) -> Tuple[Plan, Dict[str, Any]]:
+    # -- OptimizationPhase adapter (repro.core.phases) -------------------
+    def run(self, plan: Plan, pctx) -> Tuple[Plan, Dict[str, Any]]:
+        return self.optimize(plan, pctx.query, pctx.sample_frames(),
+                             catalog=pctx.catalog)
+
+    def optimize(self, plan: Plan, query, sample_frames: np.ndarray,
+                 catalog=None) -> Tuple[Plan, Dict[str, Any]]:
         report: Dict[str, Any] = {"phase": "logical",
                                   "reconciliation": RECONCILIATION,
                                   "rules": []}
@@ -89,10 +103,12 @@ class LogicalOptimizer:
                                        min_frac=0.008)
             # measure costs on the sample (post-reduction frame sizes approx)
             mllm_op = new.ops[mi]
-            cheap_cost = _time_op(cheap, sample_frames[:8], self.ctx)
+            cheap_cost = _time_op(cheap, sample_frames[:8], self.ctx,
+                                  catalog=catalog)
             mllm_cost = _time_op(MLLMExtractOp(tasks=mllm_op.tasks,
                                                model=mllm_op.model),
-                                 _shrink(sample_frames[:8]), self.ctx)
+                                 _shrink(sample_frames[:8]), self.ctx,
+                                 catalog=catalog)
             # selectivity of the color predicate measured on the sample
             cheap.open(self.ctx)
             test = cheap.process({"frames": sample_frames,

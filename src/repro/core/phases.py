@@ -1,0 +1,65 @@
+"""The common optimization-phase interface.
+
+``SemanticOptimizer`` / ``LogicalOptimizer`` / ``PhysicalOptimizer`` each
+grew their own ``optimize(...)`` signature (stream factories here, sample
+frames there), which is why the orchestrator special-cased every phase and
+why nothing else — in particular the fleet optimizer — could drive them.
+This module extracts the shared contract:
+
+* ``PhaseContext`` — everything a phase may need for one query: the query,
+  its stream factory, a ``run_fn`` executing candidate plans, validation
+  budgets, and the shared ``CostCatalog`` all phase timings flow into.
+
+* ``OptimizationPhase`` — the protocol: a ``name`` and
+  ``run(plan, pctx) -> (plan, report_dict)``.  The three optimizers
+  implement it via thin adapters (keeping their richer native signatures
+  for direct callers), so ``SuperOptimizer`` and ``FleetOptimizer`` drive
+  any phase sequence uniformly and time each phase's wall clock in one
+  place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple
+
+import numpy as np
+
+from repro.streaming.plan import Plan
+
+#: frames sampled for logical-phase measurement / chain calibration
+SAMPLE_FRAMES = 64
+#: held-out seed for the sample stream (matches the logical phase's
+#: historical choice; distinct from validation seeds 202/303)
+SAMPLE_SEED = 404
+
+
+@dataclasses.dataclass
+class PhaseContext:
+    """Per-query inputs shared by every optimization phase."""
+
+    query: Any
+    stream_factory: Callable[[int], Any]
+    run_fn: Callable[[Plan, Any, int], Any]   # (plan, stream, n) -> RunResult
+    val_frames: int = 512
+    catalog: Any = None                        # CostCatalog (optional)
+    _sample: Optional[np.ndarray] = None
+
+    def sample_frames(self, n: int = SAMPLE_FRAMES) -> np.ndarray:
+        """A cached sample batch from the query's stream (phases measuring
+        op costs / knowledge share one draw instead of re-sampling)."""
+        if self._sample is None or self._sample.shape[0] < n:
+            stream = self.stream_factory(SAMPLE_SEED)
+            self._sample, _ = stream.batch(max(n, SAMPLE_FRAMES))
+        return self._sample[:n]
+
+
+class OptimizationPhase(Protocol):
+    """One rewrite phase: semantically valid plan in, better plan out."""
+
+    name: str
+
+    def run(self, plan: Plan, pctx: PhaseContext
+            ) -> Tuple[Plan, Dict[str, Any]]:
+        """Rewrite ``plan`` for ``pctx.query``; returns the new plan and a
+        report dict whose ``"phase"`` key names the phase."""
+        ...

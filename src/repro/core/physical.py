@@ -84,12 +84,21 @@ def structured_prune(mllm, params: Any, rate: float = 0.5) -> Any:
 # ---------------------------------------------------------------------------
 
 class PhysicalOptimizer:
+    name = "physical"
+
     def __init__(self, ctx: OpContext, min_rel_accuracy: float = 0.90):
         self.ctx = ctx
         self.min_rel = min_rel_accuracy
 
+    # -- OptimizationPhase adapter (repro.core.phases) -------------------
+    def run(self, plan: Plan, pctx) -> Tuple[Plan, Dict[str, Any]]:
+        return self.optimize(plan, pctx.query, pctx.stream_factory,
+                             pctx.run_fn, val_frames=pctx.val_frames,
+                             catalog=pctx.catalog)
+
     def optimize(self, plan: Plan, query, stream_factory, run_fn,
-                 val_frames: int = 512) -> Tuple[Plan, Dict[str, Any]]:
+                 val_frames: int = 512, catalog=None
+                 ) -> Tuple[Plan, Dict[str, Any]]:
         report: Dict[str, Any] = {"phase": "physical", "decisions": []}
         new = plan.clone()
 
@@ -118,6 +127,8 @@ class PhysicalOptimizer:
             res = run_fn(p, stream_factory(303), val_frames)
             costs[cand] = time.perf_counter() - t0
             accs[cand] = query.evaluate(res)
+            if catalog is not None:
+                catalog.record_run(p.ops, res.wall_s, res.mllm_frames)
         base = max(accs["big"], 1e-9)
         viable = [c for c in candidates
                   if accs[c] >= self.min_rel * base]
@@ -125,6 +136,7 @@ class PhysicalOptimizer:
         report["model_selection"] = {
             "accuracies": accs, "wall_s": costs,
             "constraint": f">= {self.min_rel:.0%} of big-model accuracy",
+            "viable": viable or ["big"],   # fleet: joint selection reads this
             "chosen": best,
         }
         mi = new.index_of(MLLMExtractOp)

@@ -185,6 +185,8 @@ class SemanticReasoner:
 
 
 class SemanticOptimizer:
+    name = "semantic"
+
     def __init__(self, tolerance: float = 0.10, sample_frames: int = 256,
                  val_frames: int = 512):
         self.tolerance = tolerance
@@ -192,10 +194,17 @@ class SemanticOptimizer:
         self.val_frames = val_frames
         self.reasoner = SemanticReasoner()
 
+    # -- OptimizationPhase adapter (repro.core.phases) -------------------
+    def run(self, plan: Plan, pctx) -> Tuple[Plan, Dict[str, Any]]:
+        return self.optimize(plan, pctx.query, pctx.stream_factory,
+                             pctx.run_fn, catalog=pctx.catalog)
+
     # ------------------------------------------------------------------
-    def optimize(self, plan: Plan, query, stream_factory, run_fn
-                 ) -> Tuple[Plan, Dict[str, Any]]:
-        """run_fn(plan, stream, n) -> RunResult; stream_factory(seed)."""
+    def optimize(self, plan: Plan, query, stream_factory, run_fn,
+                 catalog=None) -> Tuple[Plan, Dict[str, Any]]:
+        """run_fn(plan, stream, n) -> RunResult; stream_factory(seed).
+        ``catalog`` (a CostCatalog) receives the validation runs' wall
+        clocks as run-derived model-cost samples."""
         report: Dict[str, Any] = {"phase": "semantic"}
 
         # (1) world knowledge from a sample
@@ -215,12 +224,16 @@ class SemanticOptimizer:
             new.insert_after_source(op, note=f"semantic: +{op.name}")
 
         # (4) empirical validation loop (self-correcting rewrites)
-        naive_acc = query.evaluate(
-            run_fn(plan, stream_factory(202), self.val_frames))
+        def validated_run(p):
+            res = run_fn(p, stream_factory(202), self.val_frames)
+            if catalog is not None:
+                catalog.record_run(p.ops, res.wall_s, res.mllm_frames)
+            return res
+
+        naive_acc = query.evaluate(validated_run(plan))
         attempts = []
         for round_i in range(4):
-            acc = query.evaluate(
-                run_fn(new, stream_factory(202), self.val_frames))
+            acc = query.evaluate(validated_run(new))
             attempts.append({"plan": new.describe(), "accuracy": acc})
             if acc >= naive_acc - self.tolerance:
                 break

@@ -224,6 +224,23 @@ class MultiStreamRuntime:
                       for g in forest.groups()]
             self._feeds.append(_FeedState(feed, groups))
 
+    @classmethod
+    def from_fleet(cls, fleet, streams: Dict[str, Any], ctx: OpContext,
+                   **kw) -> "MultiStreamRuntime":
+        """Serve a whole ``repro.core.fleet.FleetResult``: one feed per
+        fleet feed (``streams`` maps feed name -> stream object), with the
+        fleet's calibrated cost catalog backing the sharing-tree planner
+        unless the caller supplies one explicitly."""
+        assert set(streams) == set(fleet.plans_by_feed), \
+            f"streams {sorted(streams)} != fleet feeds " \
+            f"{sorted(fleet.plans_by_feed)}"
+        feeds = [Feed(name, streams[name],
+                      [p.clone() for p in plans])
+                 for name, plans in fleet.plans_by_feed.items()]
+        kw.setdefault("planner", SharingTreePlanner(
+            catalog=fleet.catalog, micro_batch=kw.get("micro_batch", 16)))
+        return cls(feeds, ctx, **kw)
+
     # ------------------------------------------------------------------
     def describe(self) -> str:
         return "\n".join(f"[{fs.name}]\n{self.forests[fs.name].describe()}"

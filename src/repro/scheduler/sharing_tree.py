@@ -21,10 +21,14 @@ shared and independent execution: sharing a group of k plans saves
 free, so groups whose estimated saving does not clear ``min_saving_us``
 are split back into independent singletons.
 
-The cost estimate is deliberately simple (static per-op defaults,
-calibrated ``op.cost_us`` when present, selectivity ignored); it is the
-hook where measured operator costs from the super-optimizer's calibration
-pass plug in.
+The cost estimate prefers *measured* costs end to end: every op stamped by
+the super-optimizer's calibration pass (``repro.core.costs.CostCatalog``)
+carries its measured ``cost_us`` and survivor ``pass_rate``; an unstamped
+op falls back first to the catalog's calibrated per-class (or per-MLLM-
+variant) aggregate, and only then to the static defaults below.  Chain
+cost is selectivity-aware: a filter's measured pass rate discounts every
+downstream op, which is exactly the logical optimizer's pushdown gate
+applied fleet-wide.
 """
 from __future__ import annotations
 
@@ -36,8 +40,9 @@ from repro.streaming.operators import MLLMExtractOp, Op, SourceOp
 from repro.streaming.plan import Plan
 
 #: static per-frame cost defaults (µs) when an op carries no calibrated
-#: ``cost_us`` — relative magnitudes matter, not absolutes: extracts are
-#: orders of magnitude above the cheap semantic/relational ops
+#: ``cost_us`` and no catalog entry covers it — relative magnitudes matter,
+#: not absolutes: extracts are orders of magnitude above the cheap
+#: semantic/relational ops
 MODEL_COST_US: Dict[str, float] = {
     "big": 1200.0,
     "small": 220.0,
@@ -60,18 +65,85 @@ OP_COST_US: Dict[str, float] = {
 }
 
 
-def op_cost_us(op: Op) -> float:
-    """Estimated per-input-frame cost: calibrated if available, else the
-    static default for the op class."""
-    if op.cost_us > 0:
+def op_cost_us(op: Op, catalog=None) -> float:
+    """Estimated per-input-frame cost (µs).
+
+    Resolution order: the op's own stamped measurement (``cost_us >= 0`` —
+    zero is a real measurement for a free op, only *negative* means
+    uncalibrated), then the calibration catalog's per-class / per-variant
+    aggregate, then the static default for the op class."""
+    if op.cost_us >= 0:
         return op.cost_us
+    if catalog is not None:
+        us = catalog.lookup_op(op)
+        if us is not None:
+            return us
     if isinstance(op, MLLMExtractOp):
         return MODEL_COST_US.get(op.model, MODEL_COST_US["big"])
     return OP_COST_US.get(type(op).__name__, 10.0)
 
 
-def chain_cost_us(ops: List[Op]) -> float:
-    return sum(op_cost_us(op) for op in ops)
+def op_overhead_us(op: Op, catalog=None) -> float:
+    """Calibrated fixed per-invocation cost (0.0 when never measured)."""
+    if op.cost_us >= 0:                 # stamped together with cost_us
+        return op.overhead_us
+    if catalog is not None:
+        over = catalog.lookup_op_overhead(op)
+        if over is not None:
+            return over
+    return 0.0
+
+
+def op_pass_rate(op: Op, catalog=None) -> float:
+    """Calibrated survivor fraction, clamped to [0, 1]: the op's stamped
+    measurement, else the catalog's per-class aggregate, else 1.0."""
+    rate = op.pass_rate
+    if op.cost_us < 0 and catalog is not None:
+        e = catalog.entries.get(catalog.key_of(op))
+        if e is not None:
+            rate = e.pass_rate
+    return min(max(rate, 0.0), 1.0)
+
+
+def chain_reach(ops: List[Op], catalog=None) -> float:
+    """Fraction of chain-entry frames surviving the whole chain (the
+    product of calibrated pass rates)."""
+    reach = 1.0
+    for op in ops:
+        reach *= op_pass_rate(op, catalog)
+    return reach
+
+
+def chain_cost_us(ops: List[Op], catalog=None, micro_batch: int = 16,
+                  reach: float = 1.0) -> float:
+    """Per-source-frame cost of a chain, selectivity- and overhead-aware.
+
+    Each op's *marginal* cost is weighted by the fraction of source frames
+    that actually reach it (the product of upstream calibrated pass
+    rates; ``reach`` seeds the product — pass the prefix's survivor
+    fraction when costing a tail that runs behind a shared prefix), and
+    its *fixed* per-invocation cost is amortized over the micro-batch:
+    with ``m = reach · micro_batch`` expected surviving frames per batch,
+    the op is invoked ``min(1, m)`` times per batch — an op starved by
+    upstream filters still pays its dispatch whenever any frame arrives,
+    which is precisely the term a shared prefix (paid once) amortizes
+    over its member queries (paid k times solo)."""
+    total = 0.0
+    for op in ops:
+        total += reach * op_cost_us(op, catalog)
+        over = op_overhead_us(op, catalog)
+        if over > 0.0:
+            m = reach * micro_batch
+            total += over * min(1.0, m) / micro_batch
+        reach *= op_pass_rate(op, catalog)
+    return total
+
+
+def uncalibrated(ops: List[Op]) -> List[str]:
+    """Names of ops in the chain that would fall back to a static default
+    (no stamped measurement) — the acceptance check that planned costs are
+    measured end to end."""
+    return [op.name for op in ops if op.cost_us < 0]
 
 
 @dataclasses.dataclass
@@ -133,17 +205,41 @@ class SharingTreePlanner:
     ``min_saving_us`` is the sharing threshold: a candidate group is kept
     shared only if its estimated per-frame saving strictly exceeds it —
     raise it to bias toward independent execution (e.g. when per-query
-    isolation matters more than model load)."""
+    isolation matters more than model load).  ``catalog`` (a
+    ``repro.core.costs.CostCatalog``) supplies calibrated fallback costs
+    for ops the optimizer has not stamped individually."""
 
-    def __init__(self, min_saving_us: float = 0.0):
+    def __init__(self, min_saving_us: float = 0.0, catalog=None,
+                 micro_batch: int = 16):
         self.min_saving_us = min_saving_us
+        self.catalog = catalog
+        self.micro_batch = micro_batch
 
     # ------------------------------------------------------------------
     def _group(self, plans: List[Plan]) -> SharingGroup:
         exe = factor_plans(plans)
-        shared = chain_cost_us(exe.prefix) + sum(
-            chain_cost_us(tail) for tail in exe.tails)
-        indep = sum(chain_cost_us(p.ops) for p in plans)
+        # the merged union extract inherits the column's calibration (same
+        # variant, same input: the union forward costs what any one did)
+        for i, op in enumerate(exe.prefix):
+            if isinstance(op, MLLMExtractOp) and op.cost_us < 0:
+                donors = [p.ops[i] for p in plans if i < len(p.ops)
+                          and isinstance(p.ops[i], MLLMExtractOp)
+                          and p.ops[i].cost_us >= 0]
+                if donors:
+                    op.cost_us = max(d.cost_us for d in donors)
+                    op.pass_rate = max(d.pass_rate for d in donors)
+                    op.overhead_us = max(d.overhead_us for d in donors)
+        # tails execute behind the prefix: cost them at the prefix's
+        # survivor fraction, exactly as the independent side discounts the
+        # same ops through its own leading chain — an asymmetry here would
+        # misprice every share the min_saving_us gate decides on
+        p_reach = chain_reach(exe.prefix, self.catalog)
+        shared = chain_cost_us(exe.prefix, self.catalog, self.micro_batch) \
+            + sum(chain_cost_us(tail, self.catalog, self.micro_batch,
+                                reach=p_reach)
+                  for tail in exe.tails)
+        indep = sum(chain_cost_us(p.ops, self.catalog, self.micro_batch)
+                    for p in plans)
         return SharingGroup(execution=exe, shared_cost_us=shared,
                             indep_cost_us=indep)
 

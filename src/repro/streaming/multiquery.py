@@ -142,6 +142,15 @@ class MultiQueryRuntime(RunScaffold):
         for tail in self.shared.tails:
             assert isinstance(tail[-1], SinkOp), "tails must end in a Sink"
 
+    @classmethod
+    def from_fleet(cls, fleet, feed: str, ctx: OpContext,
+                   **kw) -> "MultiQueryRuntime":
+        """Serve one feed of a ``repro.core.fleet.FleetResult``: the fleet
+        optimizer already canonicalized the plans' prefixes (identical
+        ``Op.signature()`` chains where sharing pays), so factoring here
+        recovers exactly the sharing the joint optimizer planned for."""
+        return cls([p.clone() for p in fleet.plans_by_feed[feed]], ctx, **kw)
+
     def _all_ops(self) -> List[Op]:
         ops = list(self.shared.prefix)
         for tail in self.shared.tails:

@@ -46,8 +46,22 @@ def _bucket_pad(n: int, lo: int = 4) -> int:
 class Op:
     """Base descriptor. Subclasses add parameters; runtime calls open()."""
 
-    #: estimated cost per input frame (µs) — filled by calibration
-    cost_us: float = dataclasses.field(default=0.0, init=False)
+    #: measured *marginal* cost per input frame (µs) — stamped by the cost
+    #: catalog (``repro.core.costs``).  Negative means *uncalibrated*: 0.0
+    #: is a legitimate measurement for a free op, so the sentinel is < 0.
+    cost_us: float = dataclasses.field(default=-1.0, init=False)
+
+    #: measured fixed cost per invocation (µs): dispatch + compile-cache
+    #: lookup + padding overhead, paid once per processed batch however few
+    #: frames it holds.  Sharing amortizes exactly this term — a union
+    #: extract pays it once where k independent extracts pay it k times.
+    overhead_us: float = dataclasses.field(default=0.0, init=False)
+
+    #: measured survivor fraction (output rows / input rows) on the
+    #: calibration sample — 1.0 for pure transforms, < 1.0 for filters.
+    #: Stamped alongside ``cost_us``; chain cost estimates downstream load
+    #: through it (the logical optimizer's pushdown gate, fleet-wide).
+    pass_rate: float = dataclasses.field(default=1.0, init=False)
 
     name: str = dataclasses.field(default="", init=False)
 

@@ -148,6 +148,28 @@ def _make_mllm_batches(seed: int, batch: int = 16):
     return gen
 
 
+def quick_stream_models(verbose: bool = False) -> OpContext:
+    """Tiny, un-cached stream models for smoke runs: enough to exercise
+    every code path in seconds (accuracy is the full training's job) — the
+    configuration examples use under ``--quick`` and the test suite's
+    session fixture uses throughout."""
+    return train_stream_models(steps_mllm=40, steps_small=20, steps_det=30,
+                               cache_dir=None, verbose=verbose)
+
+
+def stream_models(quick: bool = False) -> OpContext:
+    """The examples' single entry point: cached full-quality stream
+    models, or the tiny un-cached quick set under ``--quick`` (CI smoke).
+    One implementation so the quick-mode setup cannot drift between
+    examples."""
+    if quick:
+        print("quick mode: training tiny stream models…")
+        return quick_stream_models(verbose=False)
+    print("loading/training stream operator models (cached after "
+          "first run)…")
+    return train_stream_models(verbose=True)
+
+
 def train_stream_models(steps_mllm: int = 1600, steps_small: int = 500,
                         steps_det: int = 250, seed: int = 0,
                         cache_dir: Optional[str] = CACHE_DIR,

@@ -11,7 +11,6 @@ import pytest
 @pytest.fixture(scope="session")
 def stream_ctx():
     # tiny training: enough for the plumbing; accuracy is benchmarks' job
-    from repro.streaming.pretrain import train_stream_models
+    from repro.streaming.pretrain import quick_stream_models
 
-    return train_stream_models(steps_mllm=40, steps_small=20, steps_det=30,
-                               cache_dir=None, verbose=False)
+    return quick_stream_models()

@@ -1,0 +1,290 @@
+"""Fleet optimizer + cost catalog tests.
+
+Covers the joint-optimization contract: (a) the common phase interface —
+every phase optimizer drives through ``run(plan, pctx)`` and the
+orchestrator reports per-phase wall clocks and calibrated op timings;
+(b) the ``CostCatalog`` — chain calibration stamps measured
+``cost_us``/``pass_rate`` (zero is a legitimate measurement: the
+``< 0`` sentinel), persistence round-trips exactly; (c) canonicalization —
+safe-join yields the least aggressive parameterization and identical
+signatures; (d) the fleet result — sharing survives joint optimization
+and execution through the shared runtimes stays bitwise identical to solo
+runs of each query's own fleet plan.
+"""
+import pytest
+
+from repro.core.costs import CostCatalog
+from repro.core.fleet import (FleetOptimizer, FleetQuery, joined_prefix,
+                              safe_join)
+from repro.core.superopt import SuperOptimizer
+from repro.data import TollBoothStream, VolleyballStream
+from repro.queries import get_query
+from repro.scheduler.sharing_tree import (SharingTreePlanner, chain_cost_us,
+                                          chain_reach, op_cost_us,
+                                          uncalibrated)
+from repro.streaming.operators import (
+    CheapColorFilterOp,
+    CropOp,
+    DownscaleOp,
+    FusedPreprocessOp,
+    MLLMExtractOp,
+    SkipOp,
+    SourceOp,
+)
+from repro.streaming.plan import Plan
+from repro.streaming.runtime import StreamRuntime
+
+
+@pytest.fixture(scope="module")
+def ctx(stream_ctx):
+    return stream_ctx
+
+
+# ---------------------------------------------------------------------------
+# (a) cost sentinel + selectivity-aware chain cost (model-free)
+# ---------------------------------------------------------------------------
+
+def test_zero_cost_is_a_measurement_not_a_fallback():
+    op = SkipOp()
+    assert op.cost_us < 0                     # uncalibrated sentinel
+    assert op_cost_us(op) == 30.0             # static default
+    op.cost_us = 0.0                          # measured free op
+    assert op_cost_us(op) == 0.0              # NOT replaced by the default
+
+
+def test_catalog_backs_unstamped_ops_before_static_defaults():
+    cat = CostCatalog()
+    cat.record("SkipOp", 7.5, direct=True)
+    cat.record("mllm[small]", 99.0, direct=True)
+    assert op_cost_us(SkipOp(), cat) == 7.5
+    assert op_cost_us(MLLMExtractOp(model="small"), cat) == 99.0
+    assert op_cost_us(MLLMExtractOp(model="big"), cat) == 1200.0  # static
+
+
+def test_chain_cost_discounts_through_measured_pass_rates():
+    skip, mllm = SkipOp(), MLLMExtractOp()
+    skip.cost_us, skip.pass_rate = 10.0, 0.25
+    mllm.cost_us = 1000.0
+    # the extract is only reached by the 25% of frames skip lets through
+    assert chain_cost_us([skip, mllm]) == pytest.approx(10.0 + 250.0)
+    assert uncalibrated([skip, mllm]) == []
+    fresh = MLLMExtractOp()
+    assert uncalibrated([skip, fresh]) == [fresh.name]
+
+
+def test_chain_cost_tail_seeded_by_prefix_reach():
+    # a tail behind a selective shared prefix is discounted exactly like
+    # the same ops inside one independent chain — no boundary asymmetry
+    skip, mllm = SkipOp(), MLLMExtractOp()
+    skip.cost_us, skip.pass_rate = 10.0, 0.1
+    mllm.cost_us = 1000.0
+    whole = chain_cost_us([skip, mllm])
+    split = chain_cost_us([skip]) + chain_cost_us(
+        [mllm], reach=chain_reach([skip]))
+    assert split == pytest.approx(whole)
+    # planner level: sharing a selective prefix must report the saving
+    stamps = {"SourceOp": (0.0, 1.0), "SkipOp": (10.0, 0.1),
+              "MLLMExtractOp": (1000.0, 1.0), "FilterOp": (5.0, 0.5),
+              "WindowAggOp": (1.0, 1.0), "SinkOp": (1.0, 1.0)}
+    p1, p2 = get_query("Q2").naive_plan(), get_query("Q6").naive_plan()
+    for p in (p1, p2):
+        p.insert_after_source(SkipOp(amount=3))
+        for op in p.ops:
+            op.cost_us, op.pass_rate = stamps[type(op).__name__]
+    (group,) = SharingTreePlanner().plan([p1, p2]).streams["tollbooth"]
+    assert group.is_shared
+    # prefix Source->Skip->MLLM->Filter costs 110.5 and is saved once;
+    # post-prefix sinks/windows run at reach 0.05 either way
+    assert group.saving_us == pytest.approx(110.5, rel=1e-6)
+
+
+def test_unstamped_ops_read_selectivity_from_catalog():
+    cat = CostCatalog()
+    cat.record("SkipOp", 10.0, pass_rate=0.25, direct=True)
+    cost = chain_cost_us([SkipOp(), MLLMExtractOp()], cat)
+    assert cost == pytest.approx(10.0 + 0.25 * 1200.0)  # static mllm big
+
+
+# ---------------------------------------------------------------------------
+# (b) cost catalog: recording semantics + persistence
+# ---------------------------------------------------------------------------
+
+def test_direct_measurements_outrank_run_estimates():
+    cat = CostCatalog()
+    cat.record("mllm[big]", 5000.0, direct=False)   # run-derived bracket
+    cat.record("mllm[big]", 1000.0, direct=True)    # micro-benchmark
+    assert cat.lookup("mllm[big]") == 1000.0
+    cat.record("mllm[big]", 9000.0, direct=False)   # later run estimate
+    assert cat.lookup("mllm[big]") == 1000.0        # never clobbered
+    cat.record("mllm[big]", 2000.0, direct=True)    # fresh direct sample
+    assert cat.lookup("mllm[big]") == pytest.approx(1500.0)  # EMA merge
+
+
+def test_catalog_roundtrip(tmp_path):
+    cat = CostCatalog()
+    cat.record("SkipOp", 12.25, pass_rate=0.5, direct=True)
+    cat.record("mllm[big]@64x128", 4321.5, direct=True)
+    cat.record("DetectOp", 400.0, pass_rate=0.125, direct=False)
+    path = str(tmp_path / "catalog.json")
+    cat.save(path)
+    back = CostCatalog.load(path)
+    assert back.to_dict() == cat.to_dict()
+    assert len(back) == 3 and back.lookup("SkipOp") == 12.25
+
+
+# ---------------------------------------------------------------------------
+# (c) safe-join canonicalization (model-free)
+# ---------------------------------------------------------------------------
+
+def test_safe_join_takes_least_aggressive_params():
+    j = safe_join([SkipOp(amount=6, roi=(0, 0, 32, 64)),
+                   SkipOp(amount=2, roi=(32, 32, 32, 64))])
+    assert j.amount == 2 and j.roi == (0, 0, 64, 96)   # min amount, ∪ roi
+    j = safe_join([DownscaleOp(factor=4), DownscaleOp(factor=2)])
+    assert j.factor == 2
+    j = safe_join([FusedPreprocessOp(crop=(0, 0, 64, 128), factor=4),
+                   FusedPreprocessOp(crop=(64, 0, 64, 128), factor=2)])
+    assert j.crop == (0, 0, 128, 128) and j.factor == 2 and not j.grey
+    # different predicates never join
+    assert safe_join([CheapColorFilterOp(color="red"),
+                      CheapColorFilterOp(color="blue")]) is None
+
+
+def test_joined_prefix_drops_private_and_order_violating_ops():
+    src = SourceOp(stream_name="tollbooth")
+    a = [src, SkipOp(amount=4), CropOp(region=(0, 0, 64, 256)),
+         CheapColorFilterOp(color="red")]
+    b = [src, SkipOp(amount=2), CropOp(region=(64, 0, 64, 256))]
+    joined = joined_prefix([a, b])
+    names = [type(o).__name__ for o in joined]
+    assert names == ["SourceOp", "SkipOp", "CropOp"]   # private op dropped
+    assert joined[1].amount == 2
+    assert joined[2].region == (0, 0, 128, 256)
+    # identical chains join to identical signatures
+    j2 = joined_prefix([a, a])
+    assert [o.signature() for o in j2] == [o.signature() for o in a]
+
+
+# ---------------------------------------------------------------------------
+# (d) phase interface + calibration (models required)
+# ---------------------------------------------------------------------------
+
+def test_calibrate_chain_stamps_measured_costs(ctx):
+    q = get_query("Q2")
+    plan = q.naive_plan()
+    frames, _ = TollBoothStream(seed=404).batch(32)
+    cat = CostCatalog()
+    cat.calibrate_chain(plan.ops, frames, ctx)
+    assert uncalibrated(plan.ops) == []
+    for op in plan.ops:
+        assert op.cost_us >= 0 and 0.0 <= op.pass_rate <= 1.0
+    mi = plan.index_of(MLLMExtractOp)
+    assert plan.ops[mi].cost_us > plan.ops[0].cost_us   # extract dominates
+    assert cat.lookup("mllm[big]") is not None          # variant fallback
+    # stamped plans drive the planner without static defaults
+    cost = chain_cost_us(plan.ops)
+    assert cost > 0
+    # calibration leaves runtime state pristine: the plan still runs
+    res = StreamRuntime(plan, ctx, micro_batch=8).run(
+        TollBoothStream(seed=11), 16)
+    assert res.n_frames == 16
+
+
+def test_superopt_drives_phases_through_common_interface(ctx):
+    q = get_query("Q2")
+    sf = lambda seed: TollBoothStream(seed=seed)  # noqa: E731
+    opt = SuperOptimizer(ctx, val_frames=48)
+    assert set(opt.phase_registry) == {"semantic", "logical", "physical"}
+    plan, report = opt.optimize(q, sf, phases=("semantic",))
+    assert set(report.phase_wall_s) == {"semantic", "calibration"}
+    assert all(w > 0 for w in report.phase_wall_s.values())
+    assert report.op_timings, "calibrated op timings must be reported"
+    keys = {r["key"] for r in report.op_timings}
+    assert any(k.startswith("mllm[") for k in keys)
+    rows = report.to_rows()
+    assert {r["kind"] for r in rows} == {"phase_wall", "op_timing"}
+    assert uncalibrated(plan.ops) == []
+    assert "semantic" in report.describe()
+
+
+def test_merged_extract_inherits_column_calibration(ctx):
+    p1, p2 = get_query("Q2").naive_plan(), get_query("Q6").naive_plan()
+    frames, _ = TollBoothStream(seed=404).batch(16)
+    cat = CostCatalog()
+    for p in (p1, p2):
+        cat.calibrate_chain(p.ops, frames, ctx)
+    forest = SharingTreePlanner(catalog=cat).plan([p1, p2])
+    (group,) = forest.streams["tollbooth"]
+    assert group.is_shared
+    merged = [op for op in group.execution.prefix
+              if isinstance(op, MLLMExtractOp)]
+    assert merged and merged[0].cost_us >= 0   # union op keeps measurement
+
+
+# ---------------------------------------------------------------------------
+# (e) the fleet contract (slow: full joint optimization)
+# ---------------------------------------------------------------------------
+
+def _fleet_workload():
+    tb = lambda seed: TollBoothStream(seed=seed)      # noqa: E731
+    vb = lambda seed: VolleyballStream(seed=seed)     # noqa: E731
+    return ([FleetQuery(get_query(q), tb, feed="tb")
+             for q in ("Q2", "Q6", "Q8")] +
+            [FleetQuery(get_query(q), vb, feed="vb")
+             for q in ("Q12", "Q13")])
+
+
+@pytest.mark.slow
+def test_fleet_sharing_survives_and_costs_calibrated(ctx):
+    fo = FleetOptimizer(ctx, val_frames=48)
+    res = fo.optimize(_fleet_workload())
+    assert sorted(res.plans) == ["Q12", "Q13", "Q2", "Q6", "Q8"]
+    # every plan fully calibrated — the planner never falls back
+    for p in res.plans.values():
+        assert uncalibrated(p.ops) == []
+    # sharing survives joint optimization: at least as many queries sit in
+    # shared groups as under naive sharing
+    naive_forests = [SharingTreePlanner().plan(
+        [res.naive_plans[k] for k in keys])
+        for keys in res.feed_keys.values()]
+    n_shared_naive = sum(g.n_queries for f in naive_forests
+                         for g in f.groups() if g.is_shared)
+    n_shared_fleet = sum(g.n_queries for f in res.forests.values()
+                         for g in f.groups() if g.is_shared)
+    assert n_shared_fleet >= n_shared_naive
+    # the joint estimate crushes naive and stays within the defection
+    # margin of the per-query assignment (the margin keeps structure when
+    # the estimated difference is noise-level)
+    assert res.fleet_cost_us["fleet"] < res.fleet_cost_us["naive"]
+    assert res.fleet_cost_us["fleet"] <= \
+        res.fleet_cost_us["solo"] * (1.0 + 5 * fo.rel_margin)
+    assert res.decisions
+
+
+@pytest.mark.slow
+def test_fleet_execution_bitwise_identical_to_solo(ctx):
+    from repro.scheduler import MultiStreamRuntime
+    from repro.streaming.multiquery import MultiQueryRuntime
+
+    fo = FleetOptimizer(ctx, val_frames=48)
+    res = fo.optimize(_fleet_workload(), phases=("semantic", "logical"))
+    makers = {"tb": lambda: TollBoothStream(seed=555),
+              "vb": lambda: VolleyballStream(seed=555)}
+    ms = MultiStreamRuntime.from_fleet(
+        res, {f: makers[f]() for f in res.plans_by_feed}, ctx,
+        micro_batch=16)
+    out = ms.run(48)
+    for feed, plans in res.plans_by_feed.items():
+        for p in plans:
+            ind = StreamRuntime(p.clone(), ctx, micro_batch=16).run(
+                makers[feed](), 48)
+            sq = out.feeds[feed].per_query[p.query]
+            assert sq.outputs == ind.outputs
+            assert sq.window_results == ind.window_results
+    # the single-stream shared runtime accepts the same fleet plans
+    mq = MultiQueryRuntime.from_fleet(res, "tb", ctx, micro_batch=16)
+    shared = mq.run(makers["tb"](), 48)
+    for p in res.plans_by_feed["tb"]:
+        ind = StreamRuntime(p.clone(), ctx, micro_batch=16).run(
+            makers["tb"](), 48)
+        assert shared.per_query[p.query].outputs == ind.outputs

@@ -160,6 +160,101 @@ def test_sharing_tree_partitions_exactly_once(data):
                 assert g.saving_us > 0
 
 
+# ---------------------------------------------------------------------------
+# cost-catalog properties (the calibration subsystem)
+# ---------------------------------------------------------------------------
+
+_KEY = st.text(st.characters(whitelist_categories=("L", "N"),
+                             whitelist_characters="[]@x_"),
+               min_size=1, max_size=24)
+
+
+@given(entries=st.dictionaries(
+    _KEY,
+    st.tuples(st.floats(0, 1e7, allow_nan=False),
+              st.floats(0, 1, allow_nan=False),
+              st.floats(0, 1e7, allow_nan=False),
+              st.integers(1, 100), st.booleans()),
+    min_size=0, max_size=12))
+@settings(**SETTINGS)
+def test_cost_catalog_roundtrips_exactly(entries, tmp_path_factory):
+    """save() -> load() reproduces every entry bit for bit."""
+    from repro.core.costs import CostCatalog, CostEntry
+
+    cat = CostCatalog()
+    for k, (us, pr, over, n, direct) in entries.items():
+        cat.entries[k] = CostEntry(us=us, pass_rate=pr, overhead_us=over,
+                                   n=n, direct=direct)
+    path = str(tmp_path_factory.mktemp("cat") / "catalog.json")
+    cat.save(path)
+    back = CostCatalog.load(path)
+    assert back.to_dict() == cat.to_dict()
+    assert set(back.entries) == set(cat.entries)
+    for k in cat.entries:
+        assert back.entries[k] == cat.entries[k]
+
+
+@given(st.lists(st.tuples(st.floats(0, 1e6, allow_nan=False),
+                          st.booleans()), min_size=1, max_size=16))
+@settings(**SETTINGS)
+def test_cost_catalog_direct_outranks_run_estimates(samples):
+    """Once a direct measurement lands, run-derived estimates never change
+    the entry; direct samples always stay within the direct sample range."""
+    from repro.core.costs import CostCatalog
+
+    cat = CostCatalog()
+    for us, direct in samples:
+        cat.record("k", us, direct=direct)
+    direct_vals = [us for us, d in samples if d]
+    if direct_vals:
+        assert cat.entries["k"].direct
+        assert min(direct_vals) <= cat.lookup("k") <= max(direct_vals)
+    else:
+        run_vals = [us for us, _ in samples]
+        assert min(run_vals) <= cat.lookup("k") <= max(run_vals)
+
+
+@pytest.mark.slow
+@given(data=st.data())
+@settings(max_examples=3, deadline=None)
+def test_fleet_execution_equals_solo_per_query(stream_ctx, data):
+    """For random catalog subsets, fleet-optimized execution through the
+    multi-stream runtime is bitwise identical, per query, to running each
+    query's own fleet plan alone (the semantic phase alone exercises the
+    canonicalization path at property-test cost)."""
+    from repro.core.fleet import FleetOptimizer, FleetQuery
+    from repro.data import TollBoothStream, VolleyballStream
+    from repro.queries import QUERIES, get_query
+    from repro.scheduler import MultiStreamRuntime
+    from repro.streaming.runtime import StreamRuntime
+
+    qids = data.draw(st.lists(st.sampled_from(_catalog()), min_size=2,
+                              max_size=4, unique=True))
+    seed = data.draw(st.integers(0, 2**16 - 1))
+
+    def factory(ds):
+        return (lambda s: TollBoothStream(seed=s)) if ds == "tollbooth" \
+            else (lambda s: VolleyballStream(seed=s))
+
+    workload = [FleetQuery(get_query(q), factory(QUERIES[q].dataset))
+                for q in qids]
+    fo = FleetOptimizer(stream_ctx, val_frames=32)
+    res = fo.optimize(workload, phases=("semantic",))
+    assert sorted(res.plans) == sorted(qids)
+
+    streams = {feed: factory(feed)(seed) for feed in res.plans_by_feed}
+    ms = MultiStreamRuntime.from_fleet(res, streams, stream_ctx,
+                                       micro_batch=16)
+    out = ms.run(32)
+    for feed, plans in res.plans_by_feed.items():
+        for p in plans:
+            ind = StreamRuntime(p.clone(), stream_ctx, micro_batch=16).run(
+                factory(feed)(seed), 32)
+            sq = out.feeds[feed].per_query[p.query]
+            assert sq.outputs == ind.outputs
+            assert sq.window_results == ind.window_results
+
+
 @pytest.mark.slow
 @given(data=st.data())
 @settings(max_examples=5, deadline=None)
