@@ -6,7 +6,14 @@ each section additionally writes machine-readable rows to
 trajectory across PRs can be diffed without scraping stdout.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-samsara]
-                                          [--json DIR]
+                                          [--sections LIST]
+                                          [--samsara-figs LIST]
+                                          [--quick-models] [--json DIR]
+
+The CI smoke tier tracks the serving-path perf trajectory per PR with
+``--sections samsara --samsara-figs fig_ms,fig_pipeline --quick-models
+--json reports/benchmarks`` (tiny models, short streams, no result
+cache) and uploads the ``BENCH_*.json`` files as workflow artifacts.
 """
 from __future__ import annotations
 
@@ -54,20 +61,47 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fig1b only for the Saṃsāra section")
     ap.add_argument("--skip-samsara", action="store_true")
+    ap.add_argument("--sections", default=None,
+                    help="comma list of top-level sections to run "
+                         "(kernels,serving,samsara); default: all")
+    ap.add_argument("--samsara-figs", default=None,
+                    help="comma list of Saṃsāra figures (fig1b,fig5,"
+                         "table2,fig_mq,fig_ms,fig_pipeline,fig_fleet); "
+                         "overrides --quick's figure choice")
+    ap.add_argument("--quick-models", action="store_true",
+                    help="tiny smoke models + short serving streams for "
+                         "the Saṃsāra section (disables its result cache "
+                         "— smoke rows must never mix with full-model "
+                         "ones); the CI smoke tier uses this")
     ap.add_argument("--json", metavar="DIR", default=None,
                     help="also write BENCH_<section>.json files to DIR")
     args = ap.parse_args()
 
-    sections = []
-    from benchmarks import kernel_bench, serving_bench
+    wanted = args.sections.split(",") if args.sections else None
+    known = {"kernels", "serving", "samsara"}
+    assert wanted is None or set(wanted) <= known, \
+        f"unknown sections {sorted(set(wanted) - known)} (known: {sorted(known)})"
 
-    sections.append(("kernels", kernel_bench.run_all))
-    sections.append(("serving", serving_bench.run_all))
-    if not args.skip_samsara:
+    def want(name: str) -> bool:
+        return wanted is None or name in wanted
+
+    sections = []
+    if want("kernels") or want("serving"):
+        from benchmarks import kernel_bench, serving_bench
+
+        if want("kernels"):
+            sections.append(("kernels", kernel_bench.run_all))
+        if want("serving"):
+            sections.append(("serving", serving_bench.run_all))
+    if not args.skip_samsara and want("samsara"):
         from benchmarks import samsara_bench
 
+        figs = args.samsara_figs.split(",") if args.samsara_figs else None
         sections.append(("samsara",
-                         lambda: samsara_bench.run_all(quick=args.quick)))
+                         lambda: samsara_bench.run_all(
+                             quick=args.quick,
+                             quick_models=args.quick_models,
+                             sections=figs)))
 
     print("name,us_per_call,derived")
     failed: List[str] = []

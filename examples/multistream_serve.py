@@ -99,6 +99,11 @@ def main() -> None:
           f"(coalesced batches={st['coalesced_batches']}, "
           f"padding={st['padded_frames']}/{st['frames'] + st['padded_frames']}"
           " frames)")
+    print(f"pipelining:  {st['dispatches']} dispatches, "
+          f"{st['max_inflight_seen']} forwards in flight at peak, "
+          f"staging reuse {st['staging_reused']}/"
+          f"{st['staging_reused'] + st['staging_allocated']}"
+          f" (+{st['staging_skipped']} exact-fit skips)")
     print(f"independent: {indep_fps:8.2f} query-frames/s  "
           f"forwards={indep_forwards}")
     print(f"forward reduction: {1 - st['forwards'] / indep_forwards:.1%}   "

@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
-# Smoke tier: the fast test suite plus a quick-mode run of every example.
+# Smoke tier: the fast test suite, a quick-mode run of every example, and
+# the quick serving benchmarks (fig_multistream + fig_pipeline on tiny
+# models — the per-PR perf trajectory, written to reports/benchmarks/).
 #
 #   scripts/smoke.sh              # everything
 #   scripts/smoke.sh tests        # tests only
 #   scripts/smoke.sh examples     # examples only
+#   scripts/smoke.sh bench        # quick serving benchmarks only
 #
 # Matches the CI workflow (.github/workflows/ci.yml); keep the two in sync.
 set -euo pipefail
@@ -23,6 +26,13 @@ if [[ "$what" == "all" || "$what" == "examples" ]]; then
         echo "=== $ex --quick ==="
         python "$ex" --quick
     done
+fi
+
+if [[ "$what" == "all" || "$what" == "bench" ]]; then
+    echo "=== benchmarks: fig_multistream + fig_pipeline (quick models) ==="
+    python -m benchmarks.run --sections samsara \
+        --samsara-figs fig_ms,fig_pipeline --quick-models \
+        --json reports/benchmarks
 fi
 
 echo "smoke OK"

@@ -18,13 +18,20 @@ the sharing forest the planner would build for it:
 
     fleet_cost(plans) = Σ_feeds Σ_groups [ cost(shared prefix, once)
                                            + Σ_tails cost(tail) ]
+                        − coalescing_saving(forests)
 
 with per-op costs *measured* (the ``CostCatalog`` stamped ``cost_us``) and
 selectivity-aware (a filter's measured ``pass_rate`` discounts everything
 downstream — the logical optimizer's pushdown gate applied fleet-wide).
-A rewrite is accepted only if it lowers this joint objective: a rewrite
-that saves 5% on one query but breaks a prefix four other queries share
-raises Σ_groups (the prefix is now paid twice) and is rejected.
+The subtracted term is the *server-level* cross-feed interaction
+(``scheduler.sharing_tree.coalescing_saving_us``): groups on different
+feeds whose extracts land in the same (variant, frame-shape) bucket
+coalesce at the ``SharedExtractServer`` into one dispatch instead of k,
+so the objective rewards canonical prefixes that keep feeds
+bucket-aligned.  A rewrite is accepted only if it lowers this joint
+objective: a rewrite that saves 5% on one query but breaks a prefix four
+other queries share (or knocks a feed out of a cross-feed bucket) raises
+the objective and is rejected.
 
 Procedure
 ---------
@@ -296,8 +303,10 @@ class FleetOptimizer:
                 feed, fkeys, fq_of, solo_plans, reports, decisions))
 
         # (3) assignment by fleet cost: greedy coordinate descent.  A flip
-        # only changes its own feed's forest, so the per-feed costs are
-        # cached and one flip re-plans exactly one feed.
+        # re-plans exactly one feed's forest, but the objective is *not*
+        # per-feed additive: the server-level coalescing term rewards
+        # bucket alignment across feeds, so every candidate is scored over
+        # the full forest set (the cross-feed term itself is cheap).
         choice: Dict[str, str] = {
             key: ("fleet" if key in canonical else "solo") for key in keys}
 
@@ -305,9 +314,9 @@ class FleetOptimizer:
             return [canonical[k] if ch[k] == "fleet" else solo_plans[k]
                     for k in by_feed[feed]]
 
-        feed_cost = {feed: self._feed_cost(feed_plans(feed, choice))
-                     for feed in by_feed}
-        base_cost = sum(feed_cost.values())
+        forests = {feed: self.planner.plan(feed_plans(feed, choice))
+                   for feed in by_feed}
+        base_cost = self._forests_cost(forests)
         for rnd in range(self.max_rounds):
             changed = False
             for key in keys:
@@ -316,15 +325,17 @@ class FleetOptimizer:
                 feed = fq_of[key].feed
                 flipped = dict(choice)
                 flipped[key] = "solo" if choice[key] == "fleet" else "fleet"
-                new_fc = self._feed_cost(feed_plans(feed, flipped))
-                alt_cost = base_cost - feed_cost[feed] + new_fc
+                alt_forests = dict(forests)
+                alt_forests[feed] = self.planner.plan(
+                    feed_plans(feed, flipped))
+                alt_cost = self._forests_cost(alt_forests)
                 if alt_cost < base_cost * (1.0 - self.rel_margin):
                     decisions.append(
                         f"{key}: {flipped[key]} plan accepted "
                         f"(fleet cost {base_cost:.0f} -> {alt_cost:.0f}"
                         "µs/frame)")
                     choice, base_cost, changed = flipped, alt_cost, True
-                    feed_cost[feed] = new_fc
+                    forests = alt_forests
                 elif rnd == 0 and choice[key] == "fleet":
                     partners = [k for k in by_feed[feed] if k != key]
                     decisions.append(
@@ -335,12 +346,16 @@ class FleetOptimizer:
             if not changed:
                 break
 
+        save = self._coalescing_saving(forests)
+        if save > 0:
+            decisions.append(
+                f"cross-feed bucket alignment: {save:.0f}µs/frame server "
+                "coalescing saving across the chosen forests")
+
         plans = {key: (canonical[key] if choice[key] == "fleet"
                        else solo_plans[key]) for key in keys}
         plans_by_feed = {feed: [plans[k] for k in fkeys]
                          for feed, fkeys in by_feed.items()}
-        forests = {feed: self.planner.plan(fplans)
-                   for feed, fplans in plans_by_feed.items()}
         costs = {
             "naive": self._fleet_cost(
                 {f: [naive_plans[k] for k in ks]
@@ -472,16 +487,28 @@ class FleetOptimizer:
         return fq.query.evaluate(res)
 
     # ------------------------------------------------------------------
-    def _feed_cost(self, plans: List[Plan]) -> float:
-        """Per-source-frame cost of one feed's sharing forest.  The
-        planner never mutates submitted plans (factor_plans clones), so
-        assignments are scored without copying model-bearing ops."""
-        forest = self.planner.plan(plans)
-        return sum(g.shared_cost_us for g in forest.groups())
+    def _coalescing_saving(self, forests: Dict[str, Any]) -> float:
+        from repro.scheduler.sharing_tree import coalescing_saving_us
+
+        return coalescing_saving_us(
+            forests.values(), self.catalog,
+            micro_batch=getattr(self.planner, "micro_batch", 16),
+            frame_shape=self.ctx.frame_shape)
+
+    def _forests_cost(self, forests: Dict[str, Any]) -> float:
+        """The joint objective over a forest per feed: summed per-feed
+        shared costs minus the server-level cross-feed coalescing saving
+        (groups on different feeds landing in the same (variant, shape)
+        bucket pay one extract dispatch, not k)."""
+        per_feed = sum(g.shared_cost_us
+                       for f in forests.values() for g in f.groups())
+        return per_feed - self._coalescing_saving(forests)
 
     def _fleet_cost(self, plans_by_feed: Dict[str, List[Plan]]) -> float:
-        """The joint objective: per-source-frame cost of the sharing
-        forest the planner would build for this assignment, summed over
-        feeds."""
-        return sum(self._feed_cost(plans)
-                   for plans in plans_by_feed.values())
+        """The joint objective for an assignment: per-source-frame cost of
+        the sharing forests the planner would build for it, including the
+        cross-feed server term.  The planner never mutates submitted plans
+        (factor_plans clones), so assignments are scored without copying
+        model-bearing ops."""
+        return self._forests_cost({feed: self.planner.plan(plans)
+                                   for feed, plans in plans_by_feed.items()})

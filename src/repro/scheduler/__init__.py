@@ -20,18 +20,36 @@ pipeline".  This package is that serving tier, in three pieces:
   extract requests from different streams are coalesced into padded,
   shape-bucketed batches (the power-of-two bucket idiom of
   ``serving.engine`` bounds recompiles), so K feeds cost one forward per
-  coalesced batch instead of K.
+  coalesced batch instead of K.  Serving is *pipelined*: ``dispatch()``
+  packs chunks into reused staging buffers and launches forwards
+  asynchronously (JAX async dispatch), ``poll()``/``wait()`` retire
+  completed forwards, and requests materialize their device-side results
+  lazily on resume — all under a ``max_inflight`` double-buffering cap;
+  the synchronous ``drain()`` survives as the warmup / end-of-run /
+  checkpoint barrier.
 
 * ``MultiStreamRuntime`` (``multistream``) — drives heterogeneous feeds
   concurrently with round-robin micro-batch scheduling and per-stream
   backpressure, suspending each feed's pipeline at its extract ops and
   routing them through the shared server, while keeping every query's
-  outputs bitwise identical to independent execution.
+  outputs bitwise identical to independent execution.  By default round
+  k's host-side stream work (source batching, prefix ops, tail fan-out)
+  overlaps round k−1's device forwards; ``pipelined=False`` restores the
+  lock-step barrier drain.
+
+The sharing-tree cost model also carries the *server-level* cross-feed
+term (``extract_bucket`` / ``coalescing_saving_us``): sharing groups on
+different feeds whose extracts land in the same (variant, frame-shape)
+bucket coalesce into fewer, fuller forwards, and the fleet optimizer's
+joint objective (``repro.core.fleet``) rewards keeping feeds
+bucket-aligned.
 """
 from repro.scheduler.sharing_tree import (
     SharingForest,
     SharingGroup,
     SharingTreePlanner,
+    coalescing_saving_us,
+    extract_bucket,
 )
 from repro.scheduler.extract_server import ExtractRequest, SharedExtractServer
 from repro.scheduler.multistream import (

@@ -1,4 +1,4 @@
-"""Shared MLLM extract server: one model, many feeds.
+"""Shared MLLM extract server: one model, many feeds — pipelined.
 
 Every ``MLLMExtractOp`` used to own a private jitted program, so K feeds
 (and, before multi-query sharing, N queries) each paid their own forward
@@ -21,12 +21,41 @@ Because ``make_extract_fn`` normalizes per frame and every head is
 computed in one forward, each row of a coalesced batch is bitwise
 identical to what the op's solo path would have produced — the server
 changes *how many* forwards run, never *what* any query observes.
+
+Pipelined serving protocol (dispatch / poll / resume)
+-----------------------------------------------------
+``submit()`` queues a request.  ``dispatch(budget)`` assembles
+shape-bucketed chunks into *reused pre-allocated staging buffers* (no
+per-chunk allocation + zero-fill), launches the jitted forwards, and
+returns immediately: JAX async dispatch runs the device work in the
+background while the caller keeps doing host-side stream work — source
+batching, Skip/window ops, tail fan-out.  Predictions stay device-side
+behind each ``ExtractRequest`` until ``poll()`` (non-blocking) or
+``wait()``/``drain()`` (blocking) observes the forward's completion; the
+request then reports ``done``, and materializes its per-task numpy slices
+lazily on first ``result`` access — one device→host transfer per chunk,
+shared by every request coalesced into it.
+
+``max_inflight`` bounds the number of launched-but-unretired forwards
+(default 2 = double buffering), which also bounds staging memory: a
+staging buffer returns to the reuse pool as soon as its forward retires.
+``drain()`` keeps its original synchronous contract (run everything,
+block, return the forward count) and survives as the end-of-run /
+checkpoint barrier.
+
+Stats: ``forwards`` (jitted invocations), ``dispatches`` (dispatch calls
+that launched work), ``max_inflight_seen`` (peak concurrent forwards),
+``staging_allocated`` / ``staging_reused`` (buffer-pool misses / hits),
+``staging_skipped`` (exact-fit single requests passed straight to the
+jitted fn, no copy), plus the original ``frames`` / ``padded_frames`` /
+``requests`` / ``coalesced_batches``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -34,50 +63,176 @@ from repro.streaming.mllm import make_extract_fn, variant_models
 from repro.streaming.operators import OpContext, _bucket_pad
 
 
-@dataclasses.dataclass
-class ExtractRequest:
-    """One pending union extract: ``frames`` in, per-task predictions out
-    (filled by ``SharedExtractServer.drain``)."""
+def _is_ready(x) -> bool:
+    """Non-blocking completion probe; a backend without ``is_ready``
+    reports ready (materialization then simply blocks)."""
+    ready = getattr(x, "is_ready", None)
+    return bool(ready()) if ready is not None else True
 
-    variant: str                      # big | small | pruned
-    frames: np.ndarray                # (n, C, H, W)
-    feed: str = ""
-    result: Optional[Dict[str, np.ndarray]] = None
+
+class _InFlightChunk:
+    """One launched forward: device-side predictions for a coalesced chunk
+    plus the bookkeeping to fulfil its requests and recycle its staging
+    buffer once the device retires it."""
+
+    __slots__ = ("preds", "reqs", "buf_key", "buf", "completed", "_np")
+
+    def __init__(self, preds, reqs: List["ExtractRequest"],
+                 buf_key=None, buf=None):
+        self.preds = preds                # device arrays until materialized
+        self.reqs = reqs
+        self.buf_key = buf_key
+        self.buf = buf                    # staging buffer, held until retire
+        self.completed = False
+        self._np: Optional[Dict[str, np.ndarray]] = None
+
+    def ready(self) -> bool:
+        return all(_is_ready(v) for v in self.preds.values())
+
+    def block(self) -> None:
+        jax.block_until_ready(self.preds)
+
+    def materialize(self) -> Dict[str, np.ndarray]:
+        """One device→host transfer for the whole chunk (blocks only if the
+        forward is still running); requests slice views out of it."""
+        if self._np is None:
+            self._np = {k: np.asarray(v) for k, v in self.preds.items()}
+            self.preds = {}               # release device references
+        return self._np
+
+
+class ExtractRequest:
+    """One pending union extract: ``frames`` in, per-task predictions out.
+
+    Lifecycle: queued → dispatched (forward in flight) → ``done`` (forward
+    observed complete by ``poll``/``wait``/``drain``) → ``result`` (lazy
+    numpy materialization, shared per coalesced chunk, on first access)."""
+
+    __slots__ = ("variant", "frames", "feed", "_chunk", "_offset")
+
+    def __init__(self, variant: str, frames: np.ndarray, feed: str = ""):
+        self.variant = variant            # big | small | pruned
+        self.frames = frames              # (n, C, H, W)
+        self.feed = feed
+        self._chunk: Optional[_InFlightChunk] = None
+        self._offset = 0
 
     @property
     def n(self) -> int:
         return int(self.frames.shape[0])
 
     @property
+    def dispatched(self) -> bool:
+        return self._chunk is not None
+
+    @property
     def done(self) -> bool:
-        return self.result is not None
+        """The forward completed — ``result`` will not block."""
+        return self._chunk is not None and self._chunk.completed
+
+    @property
+    def result(self) -> Optional[Dict[str, np.ndarray]]:
+        if not self.done:
+            return None
+        preds = self._chunk.materialize()
+        return {k: v[self._offset:self._offset + self.n]
+                for k, v in preds.items()}
+
+
+# ---------------------------------------------------------------------------
+# suspension-queue settling (shared by MultiStreamRuntime's feed queues and
+# MultiQueryRuntime's pipelined path — one implementation of the resume-
+# order invariant, so the two executors cannot drift)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PendingResume:
+    """A suspended micro-batch: resumes past ``op_index`` once ``req``'s
+    forward completes."""
+
+    op_index: int
+    batch: Any
+    req: ExtractRequest
+    n: int
+
+
+def settle_fifo(pendings: List[Tuple[Any, PendingResume]],
+                resume: Callable[[Any, PendingResume], Optional[PendingResume]],
+                ) -> Tuple[List[Tuple[Any, PendingResume]], int]:
+    """Resume, in FIFO order, every fulfilled continuation whose *lane* has
+    no earlier outstanding one.
+
+    Stateful post-extract ops must observe batches in stream order per
+    lane (a lane = one sharing-group executor; lanes are independent), so
+    a completed continuation stays parked while an older one of the same
+    lane is still in flight.  ``resume(lane, pending)`` returns a
+    re-suspension or None; re-suspensions keep their queue position.
+    Returns ``(new queue, number resumed)``."""
+    out: List[Tuple[Any, PendingResume]] = []
+    blocked: set = set()
+    resumed = 0
+    for lane, p in pendings:
+        if id(lane) not in blocked and p.req.done:
+            nxt = resume(lane, p)
+            resumed += 1
+            if nxt is not None:
+                out.append((lane, nxt))
+                blocked.add(id(lane))
+        else:
+            out.append((lane, p))
+            blocked.add(id(lane))
+    return out, resumed
 
 
 class SharedExtractServer:
-    """Coalesces union-task extract requests across feeds into one batched
-    forward per (variant, frame-shape) bucket.
+    """Coalesces union-task extract requests across feeds into batched
+    forwards per (variant, frame-shape) bucket, pipelined.
 
     ``max_batch`` bounds a single coalesced forward (memory / latency
-    ceiling); a drain splits larger groups into several forwards."""
+    ceiling); ``max_inflight`` bounds dispatched-but-unretired forwards
+    (double buffering by default)."""
 
     VARIANTS = ("big", "small", "pruned")
 
-    def __init__(self, ctx: OpContext, max_batch: int = 64):
-        assert max_batch >= 1
+    #: consecutive dispatch calls a padded partial chunk may be deferred
+    #: before it launches anyway — bounds the latency of a feed whose
+    #: chunks never fill their bucket while other feeds keep the device
+    #: busy (continuous-traffic starvation guard)
+    MAX_PARTIAL_DEFERS = 2
+
+    def __init__(self, ctx: OpContext, max_batch: int = 64,
+                 max_inflight: int = 2):
+        assert max_batch >= 1 and max_inflight >= 1
         self.ctx = ctx
         self.max_batch = max_batch
+        self.max_inflight = max_inflight
+        self._defers: Dict[Tuple, int] = {}   # bucket key -> deferred calls
         self._fns: Dict[str, Any] = {}
         self._queue: List[ExtractRequest] = []
+        self._inflight: List[_InFlightChunk] = []
+        #: staging-buffer pool: (bucket, shape, dtype) -> free buffers
+        self._staging: Dict[Tuple, List[np.ndarray]] = {}
+        # running pending counters — submit/dispatch keep them exact, so
+        # the per-feed backpressure checks each scheduling round are O(1)
+        # instead of O(queue)
+        self._pending_reqs: Dict[str, int] = {}
+        self._pending_frames: Dict[str, int] = {}
+        self._pending_reqs_total = 0
+        self._pending_frames_total = 0
         self.stats = self._fresh_stats()
 
     @staticmethod
     def _fresh_stats() -> Dict[str, int]:
         return {"forwards": 0, "frames": 0, "padded_frames": 0,
-                "requests": 0, "coalesced_batches": 0}
+                "requests": 0, "coalesced_batches": 0,
+                "dispatches": 0, "max_inflight_seen": 0,
+                "staging_allocated": 0, "staging_reused": 0,
+                "staging_skipped": 0}
 
     def reset_stats(self) -> None:
         """Drop accounting (e.g. after warmup) without dropping the
-        compiled program cache — that is the whole point of warmup."""
+        compiled program cache or the staging pool — reusing both across
+        the measured run is the whole point of warmup."""
         self.stats = self._fresh_stats()
 
     # ------------------------------------------------------------------
@@ -91,70 +246,254 @@ class SharedExtractServer:
     # ------------------------------------------------------------------
     def submit(self, variant: str, frames: np.ndarray,
                feed: str = "") -> ExtractRequest:
-        """Queue an extract; returns the request whose ``result`` is filled
-        at the next ``drain()``.  "adaptive" must be resolved by the caller
-        (``MLLMExtractOp.begin_extract``) — the density EMA is per-op state
-        the server has no business owning."""
+        """Queue an extract; the returned request reports ``done`` once a
+        ``dispatch``ed forward completes (observed by ``poll``/``wait``)
+        or a blocking ``drain()`` runs it.  "adaptive" must be resolved by
+        the caller (``MLLMExtractOp.begin_extract``) — the density EMA is
+        per-op state the server has no business owning."""
         assert variant in self.VARIANTS, variant
         assert frames.ndim == 4 and frames.shape[0] > 0, frames.shape
         req = ExtractRequest(variant=variant, frames=frames, feed=feed)
         self._queue.append(req)
+        self._pending_reqs[feed] = self._pending_reqs.get(feed, 0) + 1
+        self._pending_frames[feed] = \
+            self._pending_frames.get(feed, 0) + req.n
+        self._pending_reqs_total += 1
+        self._pending_frames_total += req.n
         self.stats["requests"] += 1
         return req
 
     def pending_frames(self, feed: Optional[str] = None) -> int:
-        return sum(r.n for r in self._queue
-                   if feed is None or r.feed == feed)
+        """Frames queued and not yet dispatched (running counter)."""
+        if feed is None:
+            return self._pending_frames_total
+        return self._pending_frames.get(feed, 0)
 
     def pending_requests(self, feed: Optional[str] = None) -> int:
-        return sum(1 for r in self._queue
-                   if feed is None or r.feed == feed)
+        """Requests queued and not yet dispatched (running counter)."""
+        if feed is None:
+            return self._pending_reqs_total
+        return self._pending_reqs.get(feed, 0)
+
+    @property
+    def inflight(self) -> int:
+        """Forwards dispatched and not yet retired."""
+        return len(self._inflight)
 
     # ------------------------------------------------------------------
-    def _run_chunk(self, variant: str, chunk: List[ExtractRequest]) -> None:
+    def _acquire_staging(self, key: Tuple, bucket: int, shape: Tuple,
+                         dtype) -> np.ndarray:
+        pool = self._staging.get(key)
+        if pool:
+            self.stats["staging_reused"] += 1
+            return pool.pop()
+        self.stats["staging_allocated"] += 1
+        return np.empty((bucket,) + shape, dtype)
+
+    def _launch(self, variant: str, chunk: List[ExtractRequest]) -> None:
+        """Pack one chunk and launch its forward asynchronously."""
         total = sum(r.n for r in chunk)
         bucket = _bucket_pad(total)
         shape = chunk[0].frames.shape[1:]
         dtype = chunk[0].frames.dtype
-        batch = np.zeros((bucket,) + shape, dtype)
+        if len(chunk) == 1 and chunk[0].n == bucket:
+            # an exactly-full single request needs no staging copy
+            dev = jnp.asarray(chunk[0].frames)
+            buf_key = buf = None
+            self.stats["staging_skipped"] += 1
+        else:
+            buf_key = (bucket,) + tuple(shape) + (dtype.str,)
+            buf = self._acquire_staging(buf_key, bucket, shape, dtype)
+            off = 0
+            for r in chunk:
+                buf[off:off + r.n] = r.frames
+                off += r.n
+            if bucket > total:
+                # padding rows must classify as "normalized" in the jitted
+                # program — a reused buffer otherwise carries stale frames
+                buf[total:bucket] = 0
+            dev = jnp.asarray(buf)
+        preds = self._fn(variant)(dev)     # async dispatch: returns now
+        fl = _InFlightChunk(preds, list(chunk), buf_key, buf)
         off = 0
         for r in chunk:
-            batch[off:off + r.n] = r.frames
+            r._chunk = fl
+            r._offset = off
             off += r.n
-        preds = self._fn(variant)(jnp.asarray(batch))
-        preds = {k: np.asarray(v) for k, v in preds.items()}
-        off = 0
-        for r in chunk:
-            r.result = {k: v[off:off + r.n] for k, v in preds.items()}
-            off += r.n
+            self._pending_reqs[r.feed] -= 1
+            self._pending_frames[r.feed] -= r.n
+        self._pending_reqs_total -= len(chunk)
+        self._pending_frames_total -= total
+        self._inflight.append(fl)
         self.stats["forwards"] += 1
         self.stats["frames"] += total
         self.stats["padded_frames"] += bucket - total
         if len(chunk) > 1:
             self.stats["coalesced_batches"] += 1
+        self.stats["max_inflight_seen"] = max(
+            self.stats["max_inflight_seen"], len(self._inflight))
 
-    def drain(self) -> int:
-        """Run every queued request; returns the number of forwards.
+    def dispatch(self, budget: Optional[int] = None) -> int:
+        """Launch queued requests as asynchronous forwards and return
+        immediately; returns the number of forwards launched.
 
-        Requests group by (variant, frame shape, dtype); each group is
-        chunked greedily under ``max_batch`` frames per forward (a request
-        larger than ``max_batch`` still runs whole — the op's own micro-
-        batch is the upstream bound)."""
-        queue, self._queue = self._queue, []
+        Requests group by (variant, frame shape, dtype) and chunk greedily
+        under ``max_batch`` frames per forward, exactly like the
+        synchronous drain; at most ``budget`` chunks launch (None: as many
+        as ``max_inflight`` allows).  Unlaunched requests stay queued in
+        order, so per-feed FIFO resume order is preserved.
+
+        Dispatch-ahead coalesces *fuller* forwards than the barrier drain:
+        a chunk that exactly fills its power-of-two bucket launches
+        eagerly, while a padded partial chunk is deferred — backpressured
+        feeds keep filling the queue, so the partial usually grows into a
+        full bucket by the next call — unless the device would otherwise
+        idle (nothing in flight) or the chunk's bucket has already been
+        deferred ``MAX_PARTIAL_DEFERS`` times (a feed whose chunks never
+        fill a bucket must not starve behind feeds that keep the device
+        busy).  ``drain()`` flushes deferred partials at the barrier,
+        exactly like the synchronous path always did."""
+        room = self.max_inflight - len(self._inflight)
+        if budget is not None:
+            room = min(room, budget)
+        if room <= 0 or not self._queue:
+            return 0
         groups: Dict[Tuple, List[ExtractRequest]] = {}
-        for r in queue:
+        for r in self._queue:
             key = (r.variant, r.frames.shape[1:], r.frames.dtype.str)
             groups.setdefault(key, []).append(r)
-        forwards0 = self.stats["forwards"]
-        for (variant, _, _), reqs in groups.items():
+        full: List[Tuple[Tuple, List[ExtractRequest]]] = []
+        partial: List[Tuple[Tuple, List[ExtractRequest]]] = []
+        for key, reqs in groups.items():
             chunk: List[ExtractRequest] = []
             size = 0
             for r in reqs:
                 if chunk and size + r.n > self.max_batch:
-                    self._run_chunk(variant, chunk)
+                    (full if size == _bucket_pad(size) else partial).append(
+                        (key, chunk))
                     chunk, size = [], 0
                 chunk.append(r)
                 size += r.n
             if chunk:
-                self._run_chunk(variant, chunk)
+                (full if size == _bucket_pad(size) else partial).append(
+                    (key, chunk))
+        launched = 0
+        taken: set = set()
+
+        def launch(key: Tuple, chunk: List[ExtractRequest],
+                   served: bool) -> None:
+            nonlocal launched
+            self._launch(key[0], chunk)
+            if served:
+                # only a *partial* launch services the waiting bucket — a
+                # full chunk of the same key must not reset the clock of
+                # partial requests still parked behind it
+                self._defers.pop(key, None)
+            taken.update(id(r) for r in chunk)
+            launched += 1
+
+        overdue = [c for c in partial
+                   if self._defers.get(c[0], 0) >= self.MAX_PARTIAL_DEFERS]
+        fresh = [c for c in partial
+                 if self._defers.get(c[0], 0) < self.MAX_PARTIAL_DEFERS]
+        # overdue partials outrank full chunks: they have already waited
+        # their bound, and full buckets can afford one call's patience
+        for key, chunk in overdue:
+            if launched >= room:
+                break
+            launch(key, chunk, served=True)
+        for key, chunk in full:
+            if launched >= room:
+                break
+            launch(key, chunk, served=False)
+        for key, chunk in fresh:
+            if launched >= room or self._inflight:
+                break              # defer padding while the device is fed
+            launch(key, chunk, served=True)
+        # age every partial bucket that stayed queued — whatever the
+        # reason (device fed, room exhausted by fulls) — so the deferral
+        # bound holds even for a feed whose chunks never fill a bucket;
+        # buckets with nothing left waiting drop their count (a partial
+        # that grew into a launched full chunk must not leave a stale
+        # count that would prematurely pad the bucket's next partial)
+        waiting = {key for key, chunk in partial
+                   if id(chunk[0]) not in taken}
+        for key in waiting:
+            self._defers[key] = self._defers.get(key, 0) + 1
+        for key in list(self._defers):
+            if key not in waiting:
+                del self._defers[key]
+        if not taken:
+            return 0
+        self._queue = [r for r in self._queue if id(r) not in taken]
+        self.stats["dispatches"] += 1
+        return launched
+
+    # ------------------------------------------------------------------
+    def _retire(self, fl: _InFlightChunk) -> None:
+        fl.completed = True
+        if fl.buf is not None:
+            # the device consumed the staging input; recycle it
+            self._staging.setdefault(fl.buf_key, []).append(fl.buf)
+            fl.buf = None
+
+    def poll(self) -> int:
+        """Non-blocking: retire every in-flight forward whose device work
+        completed — its requests report ``done`` and their continuations
+        become resumable — and recycle its staging buffer.  Returns the
+        number of forwards retired."""
+        still: List[_InFlightChunk] = []
+        retired = 0
+        for fl in self._inflight:
+            if fl.ready():
+                self._retire(fl)
+                retired += 1
+            else:
+                still.append(fl)
+        self._inflight = still
+        return retired
+
+    def pump(self, progressed: bool, coalesce_frames: int,
+             settle: Callable[[], int]) -> None:
+        """One pipelined scheduling step — THE shared driver of the
+        dispatch/poll/resume protocol, so the serving runtimes
+        (``MultiStreamRuntime.run``, ``MultiQueryRuntime``'s server path)
+        cannot drift: dispatch once the coalescing window holds
+        ``coalesce_frames`` queued frames (or nothing progressed this
+        round), poll completions, ``settle()`` fulfilled continuations
+        (returns how many resumed), and block for the oldest forward only
+        when genuinely stalled — nothing pulled, nothing resumed.
+        Polling comes first so an inflight slot freed by a completed
+        forward refills in the *same* step — the device stays
+        double-buffered instead of draining toward depth 1."""
+        self.poll()
+        if self.pending_frames() >= coalesce_frames or not progressed:
+            self.dispatch()
+        resumed = settle()
+        if not progressed and not resumed:
+            self.wait()
+
+    def wait(self) -> int:
+        """Block until at least one in-flight forward completes
+        (dispatching queued work first when nothing is in flight); returns
+        the number of forwards retired.  The runtime's stall path: called
+        only when no feed can progress and nothing polled ready."""
+        if not self._inflight:
+            self.dispatch()
+        if not self._inflight:
+            return 0
+        self._inflight[0].block()
+        return self.poll()
+
+    def drain(self) -> int:
+        """Synchronous barrier: run every queued and in-flight request to
+        completion; returns the number of forwards.  Survives as the
+        end-of-run / warmup / checkpoint flush — the steady-state path is
+        ``dispatch``/``poll``."""
+        forwards0 = self.stats["forwards"]
+        while self._queue or self._inflight:
+            self.dispatch()
+            while self._inflight:
+                self._inflight[0].block()
+                self.poll()
         return self.stats["forwards"] - forwards0

@@ -23,6 +23,18 @@ stateful op still observes batches in stream order — once the server
 fulfils it.  Because the server runs the *same* jitted extract program the
 op's solo path uses (per-frame normalization, union heads), every query's
 outputs are bitwise identical to independent execution.
+
+Serving is *pipelined* by default (``pipelined=True``): instead of the
+lock-step barrier drain at round boundaries, the run loop launches
+coalesced forwards asynchronously (``SharedExtractServer.dispatch``),
+``poll``s for completions, and resumes exactly the continuations whose
+forwards finished — so round *k*'s source batching, prefix ops and tail
+fan-out overlap round *k−1*'s device forwards, double-buffered under the
+server's ``max_inflight`` cap.  The loop blocks (``server.wait``) only
+when no feed can progress and nothing polled ready; the synchronous
+``_drain_all`` barrier survives for warmup, end-of-run and flush.
+``pipelined=False`` restores the lock-step drain (the baseline the
+``fig_pipeline`` benchmark measures against).
 """
 from __future__ import annotations
 
@@ -32,7 +44,11 @@ from typing import Any, Dict, List, Optional, Union
 
 import numpy as np
 
-from repro.scheduler.extract_server import ExtractRequest, SharedExtractServer
+from repro.scheduler.extract_server import (
+    PendingResume,
+    SharedExtractServer,
+    settle_fifo,
+)
 from repro.scheduler.sharing_tree import SharingForest, SharingTreePlanner
 from repro.streaming.multiquery import (broadcast_windows, fan_out_tails,
                                         flush_shared)
@@ -85,30 +101,27 @@ class MultiStreamResult:
     feeds: Dict[str, FeedResult]
 
 
-@dataclasses.dataclass
-class _Pending:
-    """A suspended micro-batch: resumes past ``op_index`` once ``req`` is
-    fulfilled by the server."""
-
-    op_index: int
-    batch: Batch
-    req: ExtractRequest
-    n: int
+#: suspended micro-batch continuation (shared with MultiQueryRuntime's
+#: pipelined path — one definition of the resume contract)
+_Pending = PendingResume
 
 
 class _GroupExec:
-    """Executor for one sharing group of one feed: shared prefix with
-    extract suspension points + per-query fan-out tails."""
+    """Executor for one sharing group: shared prefix with extract
+    suspension points + per-query fan-out tails.  Used per feed by
+    ``MultiStreamRuntime`` and (single-instance) by ``MultiQueryRuntime``'s
+    server-backed pipelined path."""
 
-    def __init__(self, group, ctx: OpContext, server: SharedExtractServer,
-                 feed: str, parallel_tails: bool):
-        self.exe = group.execution
-        self.group = group
+    def __init__(self, execution, ctx: OpContext,
+                 server: SharedExtractServer, feed: str,
+                 parallel_tails: bool, open_ops: bool = True):
+        self.exe = execution
         self.server = server
         self.feed = feed
         self.parallel_tails = parallel_tails
-        for op in self.all_ops():
-            op.open(ctx)
+        if open_ops:
+            for op in self.all_ops():
+                op.open(ctx)
         for tail in self.exe.tails:
             assert isinstance(tail[-1], SinkOp), "tails must end in a Sink"
         self.reset_accumulators()
@@ -196,14 +209,17 @@ class MultiStreamRuntime:
                  planner: Optional[SharingTreePlanner] = None,
                  max_pending: int = 2,
                  coalesce_frames: Optional[int] = None,
-                 parallel_tails: bool = True):
+                 parallel_tails: bool = True,
+                 pipelined: bool = True,
+                 max_inflight: int = 2):
         assert feeds, "need at least one feed"
         names = [f.name for f in feeds]
         assert len(set(names)) == len(names), f"duplicate feed names {names}"
         self.ctx = dataclasses.replace(ctx, micro_batch=micro_batch)
         self.micro_batch = micro_batch
+        self.pipelined = pipelined
         self.server = server if server is not None \
-            else SharedExtractServer(self.ctx)
+            else SharedExtractServer(self.ctx, max_inflight=max_inflight)
         self.planner = planner if planner is not None else SharingTreePlanner()
         self.max_pending = max_pending
         #: drain the server once this many frames are queued (default: one
@@ -219,8 +235,8 @@ class MultiStreamRuntime:
                 f"feed {feed.name!r} mixes source streams {streams}"
             forest = self.planner.plan(feed.plans)
             self.forests[feed.name] = forest
-            groups = [_GroupExec(g, self.ctx, self.server, feed.name,
-                                 parallel_tails)
+            groups = [_GroupExec(g.execution, self.ctx, self.server,
+                                 feed.name, parallel_tails)
                       for g in forest.groups()]
             self._feeds.append(_FeedState(feed, groups))
 
@@ -247,23 +263,20 @@ class MultiStreamRuntime:
                          for fs in self._feeds)
 
     # ------------------------------------------------------------------
-    def _settle(self, fs: _FeedState) -> None:
-        """Resume fulfilled continuations of one feed in FIFO order (so
-        stateful post-extract ops observe stream order); re-suspensions
-        keep their position in the queue."""
-        out = []
-        for group, p in fs.pendings:
-            if p.req.done:
-                nxt = group.resume(p)
-                if nxt is not None:
-                    out.append((group, nxt))
-            else:
-                out.append((group, p))
-        fs.pendings = out
+    def _settle(self, fs: _FeedState) -> int:
+        """Resume fulfilled continuations of one feed in FIFO order per
+        group lane (so stateful post-extract ops observe stream order);
+        re-suspensions keep their position in the queue.  Returns the
+        number of continuations resumed."""
+        fs.pendings, resumed = settle_fifo(
+            fs.pendings, lambda group, p: group.resume(p))
+        return resumed
 
     def _drain_all(self) -> None:
-        """Coalesced drain + resume until no continuation is runnable."""
-        while self.server.pending_requests():
+        """Blocking barrier: run every queued and in-flight forward and
+        resume until no continuation is left (warmup, end of run, flush —
+        the steady-state path is dispatch/poll in ``run``)."""
+        while any(fs.pendings for fs in self._feeds):
             self.server.drain()
             for fs in self._feeds:
                 self._settle(fs)
@@ -344,9 +357,17 @@ class MultiStreamRuntime:
                     if p is not None:
                         fs.pendings.append((g, p))
                 progressed = True
-            if self.server.pending_frames() >= self.coalesce_frames \
+            if self.pipelined:
+                # overlap: ship the queue when the coalescing window fills
+                # (or every feed is parked), harvest whatever the device
+                # finished while this round did host-side work, resume
+                # those continuations, and block only when truly stalled
+                self.server.pump(
+                    progressed, self.coalesce_frames,
+                    lambda: sum(self._settle(fs) for fs in self._feeds))
+            elif self.server.pending_frames() >= self.coalesce_frames \
                     or not progressed:
-                self._drain_all()
+                self._drain_all()                 # lock-step baseline
             rnd += 1
         self._drain_all()
         for fs in self._feeds:

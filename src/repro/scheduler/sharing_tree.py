@@ -29,14 +29,28 @@ variant) aggregate, and only then to the static defaults below.  Chain
 cost is selectivity-aware: a filter's measured pass rate discounts every
 downstream op, which is exactly the logical optimizer's pushdown gate
 applied fleet-wide.
+
+Beyond the per-feed tree, ``extract_bucket`` / ``coalescing_saving_us``
+model the *server-level* cross-feed interaction: groups (on any feed)
+whose extracts land in the same (variant, frame-shape) bucket coalesce at
+the ``SharedExtractServer`` into fewer, fuller forwards, so the fleet
+optimizer's joint objective rewards canonical prefixes that keep feeds
+bucket-aligned.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.multiquery import SharedExecution, factor_plans, share_key
-from repro.streaming.operators import MLLMExtractOp, Op, SourceOp
+from repro.streaming.operators import (
+    CropOp,
+    DownscaleOp,
+    FusedPreprocessOp,
+    MLLMExtractOp,
+    Op,
+    SourceOp,
+)
 from repro.streaming.plan import Plan
 
 #: static per-frame cost defaults (µs) when an op carries no calibrated
@@ -137,6 +151,82 @@ def chain_cost_us(ops: List[Op], catalog=None, micro_batch: int = 16,
             total += over * min(1.0, m) / micro_batch
         reach *= op_pass_rate(op, catalog)
     return total
+
+
+#: static fallback for an extract's fixed per-invocation dispatch cost
+#: when neither the op nor the catalog carries a calibrated overhead —
+#: used only by the fleet-level coalescing term below
+EXTRACT_DISPATCH_US = 150.0
+
+
+def extract_bucket(prefix: List[Op],
+                   frame_shape: Tuple[int, int, int] = (3, 128, 256)
+                   ) -> Optional[Tuple[str, Tuple[int, int, int]]]:
+    """The ``SharedExtractServer`` coalescing bucket this chain's first
+    extract lands in — ``(model variant, (C, H, W) at the extract)`` — or
+    None when the chain has no extract.
+
+    Tracks the shape transforms the pre-extract ops apply to the feed's
+    frames (Crop / Downscale / FusedPreprocess; Greyscale keeps three
+    channels).  Sharing groups — possibly on *different* feeds — whose
+    buckets are equal coalesce into the same padded forwards at the
+    server, so aligning buckets across feeds is worth money.
+
+    ``model="adaptive"`` resolves to big/pruned per batch from the op's
+    runtime density EMA, so its bucket cannot be known statically: such
+    chains return None (no coalescing credit — the conservative score,
+    never rewarding a share the server might not realize)."""
+    c, h, w = frame_shape
+    for op in prefix:
+        if isinstance(op, MLLMExtractOp):
+            if op.model == "adaptive":
+                return None
+            return (op.model, (c, h, w))
+        if isinstance(op, CropOp):
+            h, w = op.region[2], op.region[3]
+        elif isinstance(op, DownscaleOp):
+            h, w = h // op.factor, w // op.factor
+        elif isinstance(op, FusedPreprocessOp):
+            h, w = op.crop[2] // op.factor, op.crop[3] // op.factor
+    return None
+
+
+def coalescing_saving_us(forests, catalog=None, micro_batch: int = 16,
+                         frame_shape: Tuple[int, int, int] = (3, 128, 256)
+                         ) -> float:
+    """Fleet-level server term: estimated per-source-frame saving from
+    cross-feed bucket alignment.
+
+    Sharing groups whose extracts land in the same (variant, frame-shape)
+    bucket coalesce at the ``SharedExtractServer`` into fewer, fuller
+    forwards: of k aligned groups, k−1 stop paying the extract's fixed
+    per-invocation dispatch cost (the cheapest k−1 — the most expensive
+    member's dispatch is the one actually paid).  The per-group term
+    mirrors ``chain_cost_us``'s overhead amortization
+    (``over · min(1, reach·micro_batch) / micro_batch``), so subtracting
+    this saving from the summed per-feed forest costs keeps the fleet
+    objective commensurable.  ``forests`` is any iterable of
+    ``SharingForest``s (typically one per feed)."""
+    buckets: Dict[Tuple, List[float]] = {}
+    for forest in forests:
+        for g in forest.groups():
+            prefix = g.execution.prefix
+            key = extract_bucket(prefix, frame_shape)
+            if key is None:
+                continue
+            mi = next(i for i, op in enumerate(prefix)
+                      if isinstance(op, MLLMExtractOp))
+            over = op_overhead_us(prefix[mi], catalog)
+            if over <= 0.0:
+                over = EXTRACT_DISPATCH_US
+            m = chain_reach(prefix[:mi], catalog) * micro_batch
+            buckets.setdefault(key, []).append(
+                over * min(1.0, m) / micro_batch)
+    saving = 0.0
+    for terms in buckets.values():
+        if len(terms) > 1:
+            saving += sum(terms) - max(terms)
+    return saving
 
 
 def uncalibrated(ops: List[Op]) -> List[str]:

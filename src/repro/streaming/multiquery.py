@@ -22,6 +22,14 @@ Fault tolerance mirrors ``StreamRuntime``: an aligned snapshot captures the
 source offset + every prefix and tail operator's state, and the first
 ``run()`` after ``restore()`` suppresses the warmup reset so the restored
 operator graph survives.
+
+Passing a ``SharedExtractServer`` (``server=``) switches ``run`` to the
+*pipelined* serving path: the shared prefix suspends at its extract op,
+the forward is dispatched asynchronously through the server, and the next
+micro-batch's source pull / prefix ops / tail fan-out overlap the device
+work — the same dispatch/poll/resume protocol ``MultiStreamRuntime`` uses,
+so single-feed workloads get the overlap too.  Outputs stay bitwise
+identical to the synchronous path (``server=None``, the default).
 """
 from __future__ import annotations
 
@@ -29,6 +37,8 @@ import dataclasses
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional
+
+import numpy as np
 
 from repro.streaming.operators import (
     Batch,
@@ -132,7 +142,9 @@ class MultiQueryResult:
 
 class MultiQueryRuntime(RunScaffold):
     def __init__(self, plans: List[Plan], ctx: OpContext,
-                 micro_batch: int = 16, parallel_tails: bool = True):
+                 micro_batch: int = 16, parallel_tails: bool = True,
+                 server=None, max_pending: int = 2,
+                 coalesce_frames: Optional[int] = None):
         # local import: repro.core pulls in the whole optimizer stack
         from repro.core.multiquery import factor_plans
 
@@ -141,6 +153,23 @@ class MultiQueryRuntime(RunScaffold):
         self._init_scaffold(ctx, micro_batch, self._all_ops())
         for tail in self.shared.tails:
             assert isinstance(tail[-1], SinkOp), "tails must end in a Sink"
+        #: pipelined serving (a SharedExtractServer) — None keeps the
+        #: synchronous in-line extract path
+        self.server = server
+        self.max_pending = max_pending
+        #: dispatch once this many frames are queued; a single feed fills
+        #: one micro-batch per pull, so default to shipping every batch
+        self.coalesce_frames = coalesce_frames if coalesce_frames is not None \
+            else micro_batch
+        self._gexec = None
+        if server is not None:
+            # deferred: repro.scheduler imports this module at top level
+            from repro.scheduler.multistream import _GroupExec
+
+            self._gexec = _GroupExec(self.shared, self.ctx, server,
+                                     feed="mq",
+                                     parallel_tails=parallel_tails,
+                                     open_ops=False)
 
     @classmethod
     def from_fleet(cls, fleet, feed: str, ctx: OpContext,
@@ -197,6 +226,8 @@ class MultiQueryRuntime(RunScaffold):
     # ------------------------------------------------------------------
     def run(self, stream, n_frames: int, warmup: int = 1,
             flush: bool = True) -> MultiQueryResult:
+        if self.server is not None:
+            return self._run_pipelined(stream, n_frames, warmup, flush)
         sinks = [tail[-1] for tail in self.shared.tails]
         for sink in sinks:
             sink.collected = []
@@ -227,7 +258,84 @@ class MultiQueryRuntime(RunScaffold):
         if flush:
             self._flush(counts, windows)
         wall = time.perf_counter() - t0
+        return self._collect(wall, n_frames, labels_all, pcounts, counts,
+                             windows, prefix_mllm_start, tail_mllm_start)
 
+    # ------------------------------------------------------------------
+    def _run_pipelined(self, stream, n_frames: int, warmup: int,
+                       flush: bool) -> MultiQueryResult:
+        """Dispatch-ahead serving through the SharedExtractServer: the
+        prefix suspends at its extract, the forward runs asynchronously,
+        and the next micro-batch's host work overlaps it.  ``max_pending``
+        bounds outstanding continuations (backpressure); resume order is
+        strict FIFO, so outputs match the synchronous path bitwise."""
+        from repro.scheduler.extract_server import settle_fifo
+
+        g = self._gexec
+        g.begin_run()
+        labels_all: List[Dict[str, Any]] = []
+        pendings: List[tuple] = []
+
+        def resume(lane, p):
+            return lane.resume(p)
+
+        def drain_pendings():
+            nonlocal pendings
+            while pendings:
+                self.server.drain()
+                pendings, _ = settle_fifo(pendings, resume)
+
+        def warm_advance(batch):
+            p = g.start(batch)
+            if p is not None:
+                pendings.append((g, p))
+            drain_pendings()
+
+        fresh = warmup and not self._restored
+        self._begin_run(stream, warmup, warm_advance, self._all_ops())
+        if fresh:
+            g.reset_accumulators()
+            self.server.reset_stats()
+        prefix_mllm_start = mllm_frames_of(self.shared.prefix)
+        tail_mllm_start = [mllm_frames_of(tail)
+                           for tail in self.shared.tails]
+
+        def settle() -> int:
+            nonlocal pendings
+            pendings, resumed = settle_fifo(pendings, resume)
+            return resumed
+
+        base = self._source_index
+        done = 0
+        t0 = time.perf_counter()
+        while done < n_frames or pendings:
+            progressed = False
+            if done < n_frames and len(pendings) < self.max_pending:
+                take = min(self.micro_batch, n_frames - done)
+                frames, labels = stream.batch(take)
+                labels_all.extend(labels)
+                batch = {"frames": frames,
+                         "idx": np.arange(base + done, base + done + take)}
+                done += take
+                self._stamp(batch)
+                p = g.start(batch)
+                if p is not None:
+                    pendings.append((g, p))
+                progressed = True
+            self.server.pump(progressed, self.coalesce_frames, settle)
+        drain_pendings()
+        if flush:
+            g.flush()
+        wall = time.perf_counter() - t0
+        return self._collect(wall, n_frames, labels_all, g.pcounts,
+                             g.counts, g.windows, prefix_mllm_start,
+                             tail_mllm_start)
+
+    # ------------------------------------------------------------------
+    def _collect(self, wall: float, n_frames: int, labels_all,
+                 pcounts, counts, windows, prefix_mllm_start,
+                 tail_mllm_start) -> MultiQueryResult:
+        sinks = [tail[-1] for tail in self.shared.tails]
         n_q = len(self.shared.tails)
         prefix_mllm = mllm_frames_of(self.shared.prefix) - prefix_mllm_start
         per_query: Dict[str, RunResult] = {}

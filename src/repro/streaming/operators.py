@@ -327,8 +327,12 @@ class CheapColorFilterOp(Op):
         @jax.jit
         def frac(frames):
             x = frames.astype(jnp.float32)
-            # normalized input? denormalize (traced-safe select)
-            x = jnp.where(x.max() <= 8.0, (x * 0.25 + 0.5) * 255.0, x)
+            # raw vs normalized is a *per-frame* property — the same
+            # convention as make_extract_fn: a batch-global max would
+            # mis-normalize every row of a mixed-stage batch
+            norm = x.reshape(x.shape[0], -1).max(axis=1) <= 8.0
+            x = jnp.where(norm[:, None, None, None],
+                          (x * 0.25 + 0.5) * 255.0, x)
             d = jnp.linalg.norm(x.transpose(0, 2, 3, 1) - rgb, axis=-1)
             near = (d < 70.0).astype(jnp.float32)
             return near.mean(axis=(1, 2))
@@ -361,7 +365,10 @@ class DetectOp(Op):
         @jax.jit
         def run(frames):
             x = frames.astype(jnp.float32)
-            x = jnp.where(x.max() > 8.0, x / 255.0 - 0.5, x)
+            # per-frame raw detection (the make_extract_fn convention):
+            # the batch max would mis-normalize mixed-stage batches
+            raw = x.reshape(x.shape[0], -1).max(axis=1) > 8.0
+            x = jnp.where(raw[:, None, None, None], x / 255.0 - 0.5, x)
             out = det.forward(params, x)
             return jax.nn.softmax(out["present"], -1)[:, 1]
 

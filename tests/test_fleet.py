@@ -19,8 +19,10 @@ from repro.core.fleet import (FleetOptimizer, FleetQuery, joined_prefix,
 from repro.core.superopt import SuperOptimizer
 from repro.data import TollBoothStream, VolleyballStream
 from repro.queries import get_query
-from repro.scheduler.sharing_tree import (SharingTreePlanner, chain_cost_us,
-                                          chain_reach, op_cost_us,
+from repro.scheduler.sharing_tree import (EXTRACT_DISPATCH_US,
+                                          SharingTreePlanner, chain_cost_us,
+                                          chain_reach, coalescing_saving_us,
+                                          extract_bucket, op_cost_us,
                                           uncalibrated)
 from repro.streaming.operators import (
     CheapColorFilterOp,
@@ -224,6 +226,59 @@ def test_merged_extract_inherits_column_calibration(ctx):
 # ---------------------------------------------------------------------------
 # (e) the fleet contract (slow: full joint optimization)
 # ---------------------------------------------------------------------------
+
+def _sink_plan(ops, query):
+    from repro.streaming.operators import SinkOp
+
+    return Plan(list(ops) + [SinkOp()], query=query)
+
+
+def test_extract_bucket_tracks_prefix_shape_transforms():
+    src = SourceOp(stream_name="tollbooth")
+    ex = MLLMExtractOp(tasks=("present",), model="big")
+    assert extract_bucket([src, ex]) == ("big", (3, 128, 256))
+    assert extract_bucket(
+        [src, CropOp(region=(64, 0, 64, 256)), DownscaleOp(factor=2), ex]
+    ) == ("big", (3, 32, 128))
+    assert extract_bucket(
+        [src, FusedPreprocessOp(crop=(0, 0, 128, 256), factor=2), ex]
+    ) == ("big", (3, 64, 128))
+    assert extract_bucket([src]) is None            # no extract: no bucket
+    # adaptive resolves per batch at runtime: statically unknowable bucket
+    assert extract_bucket(
+        [src, MLLMExtractOp(tasks=("present",), model="adaptive")]) is None
+
+
+def test_coalescing_saving_rewards_cross_feed_bucket_alignment():
+    # two feeds whose groups land in the same (variant, shape) bucket save
+    # k-1 of k extract dispatches; misaligned buckets save nothing
+    planner = SharingTreePlanner()
+
+    def forest(crop=None, model="big", stream="tollbooth"):
+        ops = [SourceOp(stream_name=stream)]
+        if crop is not None:
+            ops.append(CropOp(region=crop))
+        ops.append(MLLMExtractOp(tasks=("present",), model=model))
+        return planner.plan([_sink_plan(ops, "q")])
+
+    aligned = [forest(), forest(stream="volleyball")]
+    mb = 16
+    saving = coalescing_saving_us(aligned, micro_batch=mb)
+    # uncalibrated extracts fall back to the static dispatch cost; of two
+    # aligned groups exactly one stops paying it (sum - max)
+    assert saving == pytest.approx(EXTRACT_DISPATCH_US / mb)
+    three = aligned + [forest(stream="volleyball")]
+    # factor_plans disambiguates duplicate queries; three aligned groups
+    # save two dispatches
+    assert coalescing_saving_us(three, micro_batch=mb) == \
+        pytest.approx(2 * EXTRACT_DISPATCH_US / mb)
+    # a cropped prefix lands in a different bucket: nothing to coalesce
+    misaligned = [forest(), forest(crop=(64, 0, 64, 256))]
+    assert coalescing_saving_us(misaligned, micro_batch=mb) == 0.0
+    # different physical variants never share a forward either
+    mixed_model = [forest(), forest(model="small")]
+    assert coalescing_saving_us(mixed_model, micro_batch=mb) == 0.0
+
 
 def _fleet_workload():
     tb = lambda seed: TollBoothStream(seed=seed)      # noqa: E731

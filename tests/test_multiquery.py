@@ -111,6 +111,38 @@ def test_shared_matches_independent_bitwise(ctx):
             get_query(qid).evaluate(ind)
 
 
+def test_pipelined_server_path_matches_synchronous(ctx):
+    # server= switches run() to the dispatch-ahead pipelined path; results
+    # (outputs, windows, model load, counts) must match the in-line
+    # synchronous path bitwise, and the run must actually overlap
+    from repro.scheduler import SharedExtractServer
+
+    plans = [get_query(q).naive_plan() for q in MQ_QIDS]
+    sync_rt = MultiQueryRuntime([p.clone() for p in plans], ctx,
+                                micro_batch=16)
+    sync = sync_rt.run(TollBoothStream(seed=42), 64)
+    srv = SharedExtractServer(ctx)
+    pipe_rt = MultiQueryRuntime([p.clone() for p in plans], ctx,
+                                micro_batch=16, server=srv)
+    pipe = pipe_rt.run(TollBoothStream(seed=42), 64)
+    for qid in MQ_QIDS:
+        assert pipe.per_query[qid].outputs == sync.per_query[qid].outputs
+        assert pipe.per_query[qid].window_results == \
+            sync.per_query[qid].window_results
+        assert pipe.per_query[qid].op_input_counts == \
+            sync.per_query[qid].op_input_counts
+    assert pipe.mllm_frames == sync.mllm_frames == 64
+    # dispatch-ahead actually ran (>= 2 async dispatches); the peak
+    # in-flight depth is timing-dependent on a fast device, so the
+    # deterministic >= 2 claim lives in the server protocol unit test
+    assert srv.stats["dispatches"] >= 2
+    assert srv.stats["max_inflight_seen"] >= 1
+    # a second run is a fresh measurement, identical to the first
+    again = pipe_rt.run(TollBoothStream(seed=42), 64)
+    for qid in MQ_QIDS:
+        assert again.per_query[qid].outputs == pipe.per_query[qid].outputs
+
+
 def test_shared_mllm_frames_strictly_less(ctx):
     plans = [get_query(q).naive_plan() for q in MQ_QIDS]
     mq = MultiQueryRuntime(plans, ctx, micro_batch=16)

@@ -258,6 +258,50 @@ def test_fleet_execution_equals_solo_per_query(stream_ctx, data):
 @pytest.mark.slow
 @given(data=st.data())
 @settings(max_examples=5, deadline=None)
+def test_pipelined_serving_equals_synchronous_drain(stream_ctx, data):
+    """Async dispatch-ahead serving is bitwise identical to the
+    synchronous lock-step drain for random catalog workloads, per-feed
+    frame budgets (randomized feed interleavings), backpressure settings
+    and max_inflight ∈ {1, 2, 4}."""
+    from repro.data import TollBoothStream, VolleyballStream
+    from repro.queries import QUERIES, get_query
+    from repro.scheduler import Feed, MultiStreamRuntime, SharedExtractServer
+
+    qids = data.draw(st.lists(st.sampled_from(_catalog()), min_size=1,
+                              max_size=4, unique=True))
+    seed = data.draw(st.integers(0, 2**16 - 1))
+    max_inflight = data.draw(st.sampled_from([1, 2, 4]))
+    max_pending = data.draw(st.sampled_from([1, 2, 3]))
+    datasets = sorted({QUERIES[q].dataset for q in qids})
+    frames = {ds: data.draw(st.sampled_from([16, 24, 40]), label=ds)
+              for ds in datasets}
+
+    def feeds():
+        return [Feed(ds,
+                     TollBoothStream(seed=seed) if ds == "tollbooth"
+                     else VolleyballStream(seed=seed),
+                     [get_query(q).naive_plan() for q in qids
+                      if QUERIES[q].dataset == ds])
+                for ds in datasets]
+
+    sync = MultiStreamRuntime(feeds(), stream_ctx, micro_batch=16,
+                              pipelined=False,
+                              max_pending=max_pending).run(frames)
+    server = SharedExtractServer(stream_ctx, max_inflight=max_inflight)
+    pipe = MultiStreamRuntime(feeds(), stream_ctx, micro_batch=16,
+                              server=server,
+                              max_pending=max_pending).run(frames)
+    for ds in datasets:
+        for qid, pq in pipe.feeds[ds].per_query.items():
+            sq = sync.feeds[ds].per_query[qid]
+            assert pq.outputs == sq.outputs
+            assert pq.window_results == sq.window_results
+    assert pipe.mllm_frames == sync.mllm_frames
+
+
+@pytest.mark.slow
+@given(data=st.data())
+@settings(max_examples=5, deadline=None)
 def test_sharing_tree_execution_equals_independent(stream_ctx, data):
     """Random catalog subsets — including mixed tollbooth+volleyball
     subsets whose global common prefix is empty — execute through the

@@ -159,6 +159,98 @@ def test_server_coalesces_and_matches_solo_path(ctx):
             assert np.array_equal(out["attrs"][task], req.result[task])
 
 
+def test_server_dispatch_poll_protocol_and_inflight_accounting(ctx):
+    # dispatch() launches async forwards up to max_inflight and returns
+    # immediately; poll()/wait() retire them; the running pending counters
+    # drop at dispatch (they track queued-not-dispatched work)
+    srv = SharedExtractServer(ctx, max_batch=4, max_inflight=2)
+    frames = TollBoothStream(seed=3).batch(4)[0].astype(np.float32)
+    reqs = [srv.submit("big", frames, feed="a") for _ in range(3)]
+    assert srv.pending_requests() == 3 and srv.pending_frames() == 12
+    launched = srv.dispatch()
+    assert launched == 2                 # max_inflight caps dispatch-ahead
+    assert srv.inflight == 2
+    assert srv.pending_requests() == 1 and srv.pending_frames() == 4
+    assert reqs[2].result is None        # still queued
+    assert srv.wait() >= 1               # blocks for the oldest forward
+    assert reqs[0].done
+    assert srv.drain() >= 1              # runs the remaining request
+    assert all(r.done for r in reqs)
+    assert srv.inflight == 0 and srv.pending_requests() == 0
+    assert srv.stats["forwards"] == 3
+    assert srv.stats["dispatches"] >= 2
+    assert srv.stats["max_inflight_seen"] == 2
+    # exact-fit single requests skip the staging copy entirely
+    assert srv.stats["staging_skipped"] == 3
+    # lazy materialization: all three requests saw identical frames
+    for task in ("present", "color", "plate"):
+        assert np.array_equal(reqs[0].result[task], reqs[1].result[task])
+        assert np.array_equal(reqs[0].result[task], reqs[2].result[task])
+
+
+def test_server_staging_buffers_reused_without_stale_leakage(ctx):
+    srv = SharedExtractServer(ctx, max_batch=8, max_inflight=1)
+    s = TollBoothStream(seed=5)
+    f1 = s.batch(6)[0].astype(np.float32)     # bucket 8 -> staged + padded
+    f2 = s.batch(6)[0].astype(np.float32)
+    srv.submit("big", f1)
+    srv.drain()
+    assert srv.stats["staging_allocated"] == 1
+    assert srv.stats["staging_reused"] == 0
+    r2 = srv.submit("big", f2)                # same bucket: reuses buffer
+    srv.drain()
+    assert srv.stats["staging_allocated"] == 1
+    assert srv.stats["staging_reused"] == 1
+    # a reused (stale) staging buffer must not perturb results: rows match
+    # the op's solo path bitwise (padding rows re-zeroed on reuse)
+    op = MLLMExtractOp(tasks=("present", "color", "plate"), model="big")
+    op.open(ctx)
+    out = op.process({"frames": f2, "idx": np.arange(6)})
+    for task in ("present", "color", "plate"):
+        assert np.array_equal(out["attrs"][task], r2.result[task])
+    # an exactly-full request bypasses staging
+    f8 = s.batch(8)[0].astype(np.float32)
+    srv.submit("big", f8)
+    srv.drain()
+    assert srv.stats["staging_skipped"] == 1
+    assert srv.stats["staging_allocated"] == 1
+
+
+def test_server_dispatch_defers_partial_buckets_while_device_fed(ctx):
+    # a padded partial chunk is deferred while a forward is in flight (it
+    # usually grows into a full bucket by the next dispatch), but launches
+    # when the device would otherwise idle
+    srv = SharedExtractServer(ctx, max_batch=8, max_inflight=2)
+    s = TollBoothStream(seed=7)
+    full = s.batch(8)[0].astype(np.float32)   # bucket 8: full
+    part = s.batch(6)[0].astype(np.float32)   # bucket 8: padded partial
+    srv.submit("big", full)
+    srv.submit("big", part)
+    assert srv.dispatch() == 1                # full launches, partial waits
+    assert srv.pending_requests() == 1
+    srv.drain()                               # barrier flushes the partial
+    assert srv.stats["forwards"] == 2
+    # with nothing in flight, a lone partial launches immediately
+    srv.submit("big", part)
+    assert srv.dispatch() == 1
+    srv.drain()
+    # budget bounds a single dispatch call
+    srv.submit("big", full)
+    srv.submit("big", full)
+    assert srv.dispatch(budget=1) == 1
+    assert srv.pending_requests() == 1
+    srv.drain()
+    # the deferral is bounded: a partial whose bucket never fills launches
+    # after MAX_PARTIAL_DEFERS dispatch calls even while the device is fed
+    srv.submit("big", full)
+    srv.submit("big", part)
+    assert srv.dispatch() == 1                # full in flight, partial deferred
+    for _ in range(srv.MAX_PARTIAL_DEFERS - 1):
+        assert srv.dispatch() == 0            # still deferred, counted
+    assert srv.dispatch() == 1                # overdue: launches despite inflight
+    srv.drain()
+
+
 def test_server_buckets_by_shape_and_respects_max_batch(ctx):
     srv = SharedExtractServer(ctx, max_batch=8)
     full, _ = TollBoothStream(seed=1).batch(6)
@@ -173,6 +265,34 @@ def test_server_buckets_by_shape_and_respects_max_batch(ctx):
     srv.drain()
     assert srv.stats["forwards"] == 3    # 6+6 > 8 -> no 2-request chunk fits
     assert srv.stats["frames"] == 18
+
+
+def test_cheap_color_and_detect_normalize_per_frame(ctx):
+    # raw-vs-normalized is a per-frame decision (the make_extract_fn
+    # convention): a mixed-stage batch must score each row exactly as a
+    # uniform batch of that row's stage would
+    from repro.streaming.operators import CheapColorFilterOp, DetectOp
+
+    raw = TollBoothStream(seed=1).batch(4)[0].astype(np.float32)
+    normed = (raw / 255.0 - 0.5) / 0.25
+    mixed = np.concatenate([raw[:2], normed[2:]], axis=0)
+
+    color = CheapColorFilterOp(color="red")
+    color.open(ctx)
+    import jax.numpy as jnp
+    got = np.asarray(color._frac(jnp.asarray(mixed)))
+    assert np.array_equal(got[:2],
+                          np.asarray(color._frac(jnp.asarray(raw)))[:2])
+    assert np.array_equal(got[2:],
+                          np.asarray(color._frac(jnp.asarray(normed)))[2:])
+
+    det = DetectOp()
+    det.open(ctx)
+    got = np.asarray(det._run(jnp.asarray(mixed)))
+    assert np.array_equal(got[:2],
+                          np.asarray(det._run(jnp.asarray(raw)))[:2])
+    assert np.array_equal(got[2:],
+                          np.asarray(det._run(jnp.asarray(normed)))[2:])
 
 
 # ---------------------------------------------------------------------------
@@ -218,6 +338,36 @@ def test_multistream_matches_independent_bitwise(ctx):
     assert res.server_stats["coalesced_batches"] >= 1
     # model load counts union extracts once per feed frame
     assert res.mllm_frames == 3 * 64
+
+
+@pytest.mark.slow
+def test_pipelined_serving_matches_synchronous_drain(ctx):
+    # the pipelined dispatch-ahead loop (default) and the lock-step
+    # barrier drain produce bitwise-identical per-query results; the
+    # pipelined run actually overlaps (>= 2 in-flight forwards seen)
+    def feeds():
+        return [
+            Feed("tb0", TollBoothStream(seed=42),
+                 [get_query(q).naive_plan() for q in ("Q2", "Q6")]),
+            Feed("tb1", TollBoothStream(seed=7),
+                 [get_query("Q8").naive_plan()]),
+            Feed("tb2", TollBoothStream(seed=11),
+                 [get_query("Q1").naive_plan()]),
+            Feed("vb0", VolleyballStream(seed=5),
+                 [get_query(q).naive_plan() for q in ("Q12", "Q13")]),
+        ]
+
+    sync = MultiStreamRuntime(feeds(), ctx, micro_batch=16,
+                              pipelined=False).run(48)
+    pipe = MultiStreamRuntime(feeds(), ctx, micro_batch=16).run(48)
+    for fname in ("tb0", "tb1", "tb2", "vb0"):
+        for qid, sq in sync.feeds[fname].per_query.items():
+            pq = pipe.feeds[fname].per_query[qid]
+            assert pq.outputs == sq.outputs
+            assert pq.window_results == sq.window_results
+    assert pipe.mllm_frames == sync.mllm_frames
+    assert pipe.server_stats["max_inflight_seen"] >= 2
+    assert pipe.server_stats["dispatches"] >= 1
 
 
 @pytest.mark.slow
