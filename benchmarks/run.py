@@ -63,11 +63,15 @@ def main() -> None:
     ap.add_argument("--skip-samsara", action="store_true")
     ap.add_argument("--sections", default=None,
                     help="comma list of top-level sections to run "
-                         "(kernels,serving,samsara); default: all")
+                         "(kernels,serving,samsara,fig_semantic — the "
+                         "last is the semantic-gating figure as its own "
+                         "section, written to BENCH_fig_semantic.json); "
+                         "default: all")
     ap.add_argument("--samsara-figs", default=None,
                     help="comma list of Saṃsāra figures (fig1b,fig5,"
-                         "table2,fig_mq,fig_ms,fig_pipeline,fig_fleet); "
-                         "overrides --quick's figure choice")
+                         "table2,fig_mq,fig_ms,fig_pipeline,fig_fleet,"
+                         "fig_semantic); overrides --quick's figure "
+                         "choice")
     ap.add_argument("--quick-models", action="store_true",
                     help="tiny smoke models + short serving streams for "
                          "the Saṃsāra section (disables its result cache "
@@ -78,7 +82,7 @@ def main() -> None:
     args = ap.parse_args()
 
     wanted = args.sections.split(",") if args.sections else None
-    known = {"kernels", "serving", "samsara"}
+    known = {"kernels", "serving", "samsara", "fig_semantic"}
     assert wanted is None or set(wanted) <= known, \
         f"unknown sections {sorted(set(wanted) - known)} (known: {sorted(known)})"
 
@@ -97,11 +101,26 @@ def main() -> None:
         from benchmarks import samsara_bench
 
         figs = args.samsara_figs.split(",") if args.samsara_figs else None
+        # a figure also requested as its own top-level section must not
+        # run twice when the samsara default list would include it
+        exclude = ["fig_semantic"] \
+            if wanted is not None and "fig_semantic" in wanted else None
         sections.append(("samsara",
                          lambda: samsara_bench.run_all(
                              quick=args.quick,
                              quick_models=args.quick_models,
-                             sections=figs)))
+                             sections=figs, exclude=exclude)))
+    if want("fig_semantic") and wanted is not None:
+        # its own top-level section (not just a samsara figure) so the
+        # gating tier's rows land in a dedicated BENCH_fig_semantic.json
+        # next to the existing artifacts
+        from benchmarks import samsara_bench
+
+        sections.append(("fig_semantic",
+                         lambda: samsara_bench.run_all(
+                             quick=args.quick,
+                             quick_models=args.quick_models,
+                             sections=["fig_semantic"])))
 
     print("name,us_per_call,derived")
     failed: List[str] = []

@@ -1,0 +1,134 @@
+"""Semantic gating tier walkthrough: the temporal-redundancy extract
+cache in front of the shared MLLM.
+
+Serves the 4-feed / 9-query workload three ways over identical streams:
+
+  * ungated   — PR 4's pipelined shared serving (every surviving frame
+                pays a forward);
+  * gated     — a ``SemanticGate`` consulted inside
+                ``SharedExtractServer.submit``: near-duplicates of a
+                recent keyframe are answered from its cached extract
+                output, every Nth hit is revalidated through the model
+                and *compared* (drift detection), and each feed's
+                similarity threshold is tuned online against the
+                configured accuracy budget;
+  * disabled  — the same gate with threshold=0, demonstrating the
+                no-regression contract: bitwise identical to ungated.
+
+Prints forwards / model-frame reductions, measured
+hit/miss/revalidation/mismatch rates, the per-feed tuned thresholds, and
+per-query accuracy deltas against the ungated run.
+
+  PYTHONPATH=src python examples/semantic_serve.py [--frames 256] [--quick]
+"""
+import argparse
+
+from repro.data import TollBoothStream, VolleyballStream
+from repro.queries import get_query
+from repro.scheduler import Feed, MultiStreamRuntime, SharedExtractServer
+from repro.semantic import GateConfig, SemanticGate
+from repro.streaming.pretrain import stream_models
+
+FEEDS = (
+    ("tb-north", "tollbooth", 1234, ("Q2", "Q6", "Q8")),
+    ("tb-south", "tollbooth", 4321, ("Q1", "Q5")),
+    ("tb-east", "tollbooth", 2025, ("Q3", "Q9")),
+    ("court-1", "volleyball", 1234, ("Q12", "Q13")),
+)
+
+
+def _make_stream(dataset: str, seed: int):
+    if dataset == "tollbooth":
+        return TollBoothStream(seed=seed)
+    return VolleyballStream(seed=seed)
+
+
+def _feeds():
+    return [Feed(name, _make_stream(ds, seed),
+                 [get_query(qid).naive_plan() for qid in qids])
+            for name, ds, seed, qids in FEEDS]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=256,
+                    help="frames per feed")
+    ap.add_argument("--threshold", type=float, default=0.06,
+                    help="base signature-distance threshold (0 disables)")
+    ap.add_argument("--revalidate-every", type=int, default=8)
+    ap.add_argument("--accuracy-budget", type=float, default=0.05)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny models + short streams: smoke-run in seconds")
+    args = ap.parse_args()
+
+    if args.quick:
+        args.frames = min(args.frames, 48)
+    ctx = stream_models(quick=args.quick)
+
+    print(f"\n=== ungated serving: {len(FEEDS)} feeds × "
+          f"{args.frames} frames ===")
+    base = MultiStreamRuntime(_feeds(), ctx, micro_batch=16
+                              ).run(args.frames)
+    bst = base.server_stats
+
+    cfg = GateConfig(threshold=args.threshold,
+                     revalidate_every=args.revalidate_every,
+                     accuracy_budget=args.accuracy_budget)
+    gate = SemanticGate(cfg)
+    print(f"=== gated serving (threshold={cfg.threshold}, "
+          f"revalidate_every={cfg.revalidate_every}, "
+          f"accuracy_budget={cfg.accuracy_budget}) ===")
+    gated = MultiStreamRuntime(_feeds(), ctx, micro_batch=16,
+                               server=SharedExtractServer(ctx, gate=gate)
+                               ).run(args.frames)
+    gst = gated.server_stats
+
+    print("=== disabled gate (threshold=0): no-regression check ===")
+    off = MultiStreamRuntime(
+        _feeds(), ctx, micro_batch=16,
+        server=SharedExtractServer(
+            ctx, gate=SemanticGate(GateConfig(threshold=0.0)))
+    ).run(args.frames)
+
+    print(f"\n{'feed':<10} {'query':<6} {'acc(ungated)':>13} "
+          f"{'acc(gated)':>11} {'Δ':>7}  off=ungated")
+    worst = 0.0
+    identical = True
+    for name, _, _, qids in FEEDS:
+        for qid in qids:
+            bq = base.feeds[name].per_query[qid]
+            gq = gated.feeds[name].per_query[qid]
+            oq = off.feeds[name].per_query[qid]
+            same = oq.outputs == bq.outputs \
+                and oq.window_results == bq.window_results
+            identical = identical and same
+            a, b = get_query(qid).evaluate(bq), get_query(qid).evaluate(gq)
+            worst = max(worst, a - b)
+            print(f"{name:<10} {qid:<6} {a:>13.3f} {b:>11.3f} "
+                  f"{b - a:>+7.3f}  {'yes' if same else 'NO'}")
+
+    served = gst["cache_hits"] + gst["cache_misses"] + gst["revalidations"]
+    print(f"\nforwards:      {gst['forwards']} gated vs "
+          f"{bst['forwards']} ungated "
+          f"({bst['forwards'] / max(gst['forwards'], 1):.2f}x reduction)")
+    print(f"model frames:  {gst['frames']} gated vs {bst['frames']} "
+          f"ungated "
+          f"({bst['frames'] / max(gst['frames'], 1):.2f}x reduction)")
+    print(f"cache:         {gst['cache_hits']}/{served} hits "
+          f"({gst['cache_hits'] / max(served, 1):.1%}), "
+          f"{gst['revalidations']} revalidations, "
+          f"{gst['cache_mismatches']} mismatches")
+    print("thresholds:    " + "  ".join(
+        f"{feed}={st.threshold:.4f}"
+        for feed, st in sorted(gate.controller._feeds.items())))
+    print(f"throughput:    {gated.fps:.2f} gated vs {base.fps:.2f} "
+          f"ungated query-frames/s")
+    print(f"accuracy:      worst drop {worst:.3f} "
+          f"(budget {cfg.accuracy_budget}) -> "
+          f"{'WITHIN' if worst <= cfg.accuracy_budget else 'OVER'} budget")
+    print(f"disabled gate: {'bitwise identical' if identical else 'DIVERGED'}"
+          " vs ungated serving")
+
+
+if __name__ == "__main__":
+    main()

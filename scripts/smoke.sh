@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Smoke tier: the fast test suite, a quick-mode run of every example, and
-# the quick serving benchmarks (fig_multistream + fig_pipeline on tiny
-# models — the per-PR perf trajectory, written to reports/benchmarks/).
+# the quick serving benchmarks (fig_multistream + fig_pipeline +
+# fig_semantic on tiny models — the per-PR perf trajectory, written to
+# reports/benchmarks/).
 #
 #   scripts/smoke.sh              # everything
 #   scripts/smoke.sh tests        # tests only
@@ -29,8 +30,8 @@ if [[ "$what" == "all" || "$what" == "examples" ]]; then
 fi
 
 if [[ "$what" == "all" || "$what" == "bench" ]]; then
-    echo "=== benchmarks: fig_multistream + fig_pipeline (quick models) ==="
-    python -m benchmarks.run --sections samsara \
+    echo "=== benchmarks: fig_multistream + fig_pipeline + fig_semantic (quick models) ==="
+    python -m benchmarks.run --sections samsara,fig_semantic \
         --samsara-figs fig_ms,fig_pipeline --quick-models \
         --json reports/benchmarks
 fi

@@ -90,6 +90,10 @@ class CostCatalog:
 
     def __init__(self):
         self.entries: Dict[str, CostEntry] = {}
+        #: measured semantic-gate hit rate per feed (fraction of extract
+        #: frames answered from the keyframe cache) — the model-load term
+        #: the sharing-tree planner discounts extract costs by
+        self.gate_hit_rates: Dict[str, float] = {}
 
     # -- recording ---------------------------------------------------------
     def record(self, key: str, us: float, pass_rate: float = 1.0,
@@ -119,6 +123,24 @@ class CostCatalog:
         for op in plan_ops:
             if isinstance(op, MLLMExtractOp):
                 self.record(mllm_key(op.model), us, direct=False)
+
+    def record_gate_hit_rate(self, feed: str, rate: float) -> None:
+        """Fold one measured semantic-cache hit rate for a feed (from a
+        gated run's counters) into the catalog — EMA-merged like every
+        other measurement, so recent traffic dominates."""
+        assert 0.0 <= rate <= 1.0, rate
+        if feed in self.gate_hit_rates:
+            self.gate_hit_rates[feed] = \
+                (1 - EMA) * self.gate_hit_rates[feed] + EMA * rate
+        else:
+            self.gate_hit_rates[feed] = rate
+
+    def mean_gate_hit_rate(self) -> float:
+        """Workload-level hit rate the planner discounts extract costs
+        by; 0 until a gated run has been measured."""
+        if not self.gate_hit_rates:
+            return 0.0
+        return sum(self.gate_hit_rates.values()) / len(self.gate_hit_rates)
 
     # -- lookup / stamping -------------------------------------------------
     def lookup(self, key: str) -> Optional[float]:
@@ -218,6 +240,7 @@ class CostCatalog:
             "version": self.VERSION,
             "entries": {k: dataclasses.asdict(e)
                         for k, e in sorted(self.entries.items())},
+            "gate_hit_rates": dict(sorted(self.gate_hit_rates.items())),
         }
 
     @classmethod
@@ -227,6 +250,7 @@ class CostCatalog:
         cat = cls()
         for k, e in data.get("entries", {}).items():
             cat.entries[k] = CostEntry(**e)
+        cat.gate_hit_rates = dict(data.get("gate_hit_rates", {}))
         return cat
 
     def save(self, path: str) -> None:

@@ -245,7 +245,8 @@ class FleetOptimizer:
                  val_frames: int = 256,
                  catalog: Optional[CostCatalog] = None,
                  planner=None,
-                 max_rounds: int = 3, rel_margin: float = 0.02):
+                 max_rounds: int = 3, rel_margin: float = 0.02,
+                 gate_hit_rate: Optional[float] = None):
         # deferred: repro.scheduler <-> repro.core import cycle
         from repro.scheduler.sharing_tree import SharingTreePlanner
 
@@ -262,9 +263,16 @@ class FleetOptimizer:
                                    micro_batch=micro_batch,
                                    val_frames=val_frames,
                                    catalog=self.catalog)
+        # gated plans pay the model only for the novel fraction of their
+        # frames: the planner discounts extract costs by the measured
+        # semantic-cache hit rate (catalog.gate_hit_rates, or an explicit
+        # override), so assignments are priced for the serving tier as it
+        # actually runs — sharing that only paid off at full model load
+        # is correctly dropped once gating absorbs most of it
         self.planner = planner if planner is not None \
             else SharingTreePlanner(catalog=self.catalog,
-                                    micro_batch=micro_batch)
+                                    micro_batch=micro_batch,
+                                    gate_hit_rate=gate_hit_rate)
         self.max_rounds = max_rounds
 
     # ------------------------------------------------------------------

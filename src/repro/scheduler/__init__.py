@@ -43,6 +43,14 @@ different feeds whose extracts land in the same (variant, frame-shape)
 bucket coalesce into fewer, fuller forwards, and the fleet optimizer's
 joint objective (``repro.core.fleet``) rewards keeping feeds
 bucket-aligned.
+
+In front of the server sits the optional **semantic gating tier**
+(``repro.semantic``): a temporal-redundancy keyframe cache consulted
+inside ``submit()`` — near-duplicate frames are answered from cached
+extract outputs with a revalidation budget and accuracy-budgeted
+per-feed admission control, and the sharing-tree cost model discounts
+extract costs by the measured hit rate (``chain_cost_us(...,
+gate_hit_rate=…)`` / ``CostCatalog.gate_hit_rates``).
 """
 from repro.scheduler.sharing_tree import (
     SharingForest,
@@ -51,7 +59,11 @@ from repro.scheduler.sharing_tree import (
     coalescing_saving_us,
     extract_bucket,
 )
-from repro.scheduler.extract_server import ExtractRequest, SharedExtractServer
+from repro.scheduler.extract_server import (
+    ExtractRequest,
+    GatedExtractRequest,
+    SharedExtractServer,
+)
 from repro.scheduler.multistream import (
     Feed,
     FeedResult,

@@ -43,17 +43,32 @@ staging buffer returns to the reuse pool as soon as its forward retires.
 block, return the forward count) and survives as the end-of-run /
 checkpoint barrier.
 
+Semantic gating (the cache-consult stage)
+-----------------------------------------
+With a ``repro.semantic.SemanticGate`` attached (``gate=`` or
+``ctx.gate``), ``submit()`` consults the per-feed keyframe cache before
+anything is queued: near-duplicate rows are answered from cached extract
+outputs and only the admission's *novel* rows (plus its revalidation
+hits) enter the dispatch queue — a batch whose every row hits
+short-circuits dispatch entirely.  The returned ``GatedExtractRequest``
+keeps the ``n``/``done``/``result`` surface, so the runtimes' suspension
+protocol is unchanged; a gate with ``threshold=0`` is inert and the
+ungated path stays bitwise identical.
+
 Stats: ``forwards`` (jitted invocations), ``dispatches`` (dispatch calls
 that launched work), ``max_inflight_seen`` (peak concurrent forwards),
 ``staging_allocated`` / ``staging_reused`` (buffer-pool misses / hits),
 ``staging_skipped`` (exact-fit single requests passed straight to the
-jitted fn, no copy), plus the original ``frames`` / ``padded_frames`` /
-``requests`` / ``coalesced_batches``.
+jitted fn, no copy), the cache tier's ``cache_hits`` / ``cache_misses`` /
+``revalidations`` / ``cache_mismatches``, plus the original ``frames`` /
+``padded_frames`` / ``requests`` / ``coalesced_batches``.  ``stats`` is a
+*cached view*: one dict object for the server's lifetime, updated in
+place (never rebuilt per read).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -99,6 +114,44 @@ class _InFlightChunk:
             self._np = {k: np.asarray(v) for k, v in self.preds.items()}
             self.preds = {}               # release device references
         return self._np
+
+
+class GatedExtractRequest:
+    """A submitted extract answered (partly or fully) by the semantic
+    cache: only the admission's *model rows* entered the server queue
+    (``inner``), the rest resolve from cached keyframe outputs.  Presents
+    the same ``n``/``done``/``result`` surface as ``ExtractRequest``, so
+    continuations and ``settle_fifo`` never distinguish the two."""
+
+    __slots__ = ("variant", "frames", "feed", "adm", "inner")
+
+    def __init__(self, variant: str, frames: np.ndarray, feed: str,
+                 adm, inner: Optional["ExtractRequest"]):
+        self.variant = variant
+        self.frames = frames
+        self.feed = feed
+        self.adm = adm
+        self.inner = inner
+
+    @property
+    def n(self) -> int:
+        return int(self.frames.shape[0])
+
+    @property
+    def dispatched(self) -> bool:
+        return self.inner is None or self.inner.dispatched
+
+    @property
+    def done(self) -> bool:
+        """The model rows' forward and every cached-row donor completed —
+        ``result`` will not block."""
+        return self.adm.ready
+
+    @property
+    def result(self) -> Optional[Dict[str, np.ndarray]]:
+        if not self.done:
+            return None
+        return self.adm.assemble()
 
 
 class ExtractRequest:
@@ -152,7 +205,7 @@ class PendingResume:
 
     op_index: int
     batch: Any
-    req: ExtractRequest
+    req: Union["ExtractRequest", "GatedExtractRequest"]
     n: int
 
 
@@ -201,11 +254,15 @@ class SharedExtractServer:
     MAX_PARTIAL_DEFERS = 2
 
     def __init__(self, ctx: OpContext, max_batch: int = 64,
-                 max_inflight: int = 2):
+                 max_inflight: int = 2, gate=None):
         assert max_batch >= 1 and max_inflight >= 1
         self.ctx = ctx
         self.max_batch = max_batch
         self.max_inflight = max_inflight
+        #: optional ``repro.semantic.SemanticGate``: the cache-consult
+        #: stage in front of dispatch.  Defaults to the context's gate so
+        #: one configuration point covers the solo and the served path.
+        self.gate = gate if gate is not None else ctx.gate
         self._defers: Dict[Tuple, int] = {}   # bucket key -> deferred calls
         self._fns: Dict[str, Any] = {}
         self._queue: List[ExtractRequest] = []
@@ -219,7 +276,7 @@ class SharedExtractServer:
         self._pending_frames: Dict[str, int] = {}
         self._pending_reqs_total = 0
         self._pending_frames_total = 0
-        self.stats = self._fresh_stats()
+        self._stats = self._fresh_stats()
 
     @staticmethod
     def _fresh_stats() -> Dict[str, int]:
@@ -227,13 +284,30 @@ class SharedExtractServer:
                 "requests": 0, "coalesced_batches": 0,
                 "dispatches": 0, "max_inflight_seen": 0,
                 "staging_allocated": 0, "staging_reused": 0,
-                "staging_skipped": 0}
+                "staging_skipped": 0,
+                # cache tier (mirrors the gate's counters; stays 0 ungated)
+                "cache_hits": 0, "cache_misses": 0,
+                "revalidations": 0, "cache_mismatches": 0}
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """The server's counters as a *cached view*: one dict object for
+        the server's lifetime, updated in place (it used to be rebound on
+        every reset, so holders diffed against a dead dict).  Reading the
+        view syncs the semantic-cache tier's counters
+        (hits/misses/revalidations/mismatches) into it."""
+        if self.gate is not None:
+            self._stats.update(self.gate.counters)
+        return self._stats
 
     def reset_stats(self) -> None:
         """Drop accounting (e.g. after warmup) without dropping the
-        compiled program cache or the staging pool — reusing both across
-        the measured run is the whole point of warmup."""
-        self.stats = self._fresh_stats()
+        compiled program cache, the staging pool or the semantic cache's
+        keyframes — reusing those across the measured run is the whole
+        point of warmup."""
+        self._stats.update(self._fresh_stats())
+        if self.gate is not None:
+            self.gate.reset_counters()
 
     # ------------------------------------------------------------------
     def _fn(self, variant: str):
@@ -245,14 +319,34 @@ class SharedExtractServer:
 
     # ------------------------------------------------------------------
     def submit(self, variant: str, frames: np.ndarray,
-               feed: str = "") -> ExtractRequest:
+               feed: str = "") -> Union[ExtractRequest,
+                                        GatedExtractRequest]:
         """Queue an extract; the returned request reports ``done`` once a
         ``dispatch``ed forward completes (observed by ``poll``/``wait``)
         or a blocking ``drain()`` runs it.  "adaptive" must be resolved by
         the caller (``MLLMExtractOp.begin_extract``) — the density EMA is
-        per-op state the server has no business owning."""
+        per-op state the server has no business owning.
+
+        With an active semantic gate, submission first consults the
+        per-feed keyframe cache: near-duplicate rows are answered from
+        cached extract outputs and only the admission's model rows enter
+        the dispatch queue — a batch whose every row hits short-circuits
+        dispatch entirely (``done`` immediately, zero queued frames)."""
         assert variant in self.VARIANTS, variant
         assert frames.ndim == 4 and frames.shape[0] > 0, frames.shape
+        self.stats["requests"] += 1
+        if self.gate is not None and self.gate.active:
+            adm = self.gate.admit(feed, variant, frames)
+            inner = None
+            if adm.n_model:
+                inner = self._enqueue(variant, adm.model_frames(frames),
+                                      feed)
+            adm.bind(inner)
+            return GatedExtractRequest(variant, frames, feed, adm, inner)
+        return self._enqueue(variant, frames, feed)
+
+    def _enqueue(self, variant: str, frames: np.ndarray,
+                 feed: str) -> ExtractRequest:
         req = ExtractRequest(variant=variant, frames=frames, feed=feed)
         self._queue.append(req)
         self._pending_reqs[feed] = self._pending_reqs.get(feed, 0) + 1
@@ -260,7 +354,6 @@ class SharedExtractServer:
             self._pending_frames.get(feed, 0) + req.n
         self._pending_reqs_total += 1
         self._pending_frames_total += req.n
-        self.stats["requests"] += 1
         return req
 
     def pending_frames(self, feed: Optional[str] = None) -> int:

@@ -93,7 +93,9 @@ class MultiStreamResult:
     wall_s: float
     n_feeds: int
     n_queries: int
-    #: frames through MLLM extracts (each shared prefix counted once)
+    #: frames *reaching* MLLM extracts (each shared prefix counted once);
+    #: under semantic gating the cache answers part of them — frames that
+    #: actually paid a forward are ``server_stats["frames"]``
     mllm_frames: int
     #: server accounting for the sharing claim: ``forwards`` is the number
     #: of jitted extract invocations serving *all* feeds
@@ -211,15 +213,20 @@ class MultiStreamRuntime:
                  coalesce_frames: Optional[int] = None,
                  parallel_tails: bool = True,
                  pipelined: bool = True,
-                 max_inflight: int = 2):
+                 max_inflight: int = 2,
+                 gate=None):
         assert feeds, "need at least one feed"
         names = [f.name for f in feeds]
         assert len(set(names)) == len(names), f"duplicate feed names {names}"
+        assert server is None or gate is None, \
+            "pass the gate to the SharedExtractServer, not both"
         self.ctx = dataclasses.replace(ctx, micro_batch=micro_batch)
         self.micro_batch = micro_batch
         self.pipelined = pipelined
         self.server = server if server is not None \
-            else SharedExtractServer(self.ctx, max_inflight=max_inflight)
+            else SharedExtractServer(self.ctx, max_inflight=max_inflight,
+                                     gate=gate)
+        self._restored = False
         self.planner = planner if planner is not None else SharingTreePlanner()
         self.max_pending = max_pending
         #: drain the server once this many frames are queued (default: one
@@ -263,6 +270,45 @@ class MultiStreamRuntime:
                          for fs in self._feeds)
 
     # ------------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Aligned multi-feed checkpoint: per-feed source offsets + every
+        group operator's state + the semantic gate's per-feed keyframes
+        and tuned thresholds.  ``SharedExtractServer.drain()`` is the
+        alignment barrier — in-flight extract continuations are run to
+        completion and resumed first, so no channel holds data."""
+        self._drain_all()
+        assert not (self.server._queue or self.server._inflight)
+        st: Dict[str, Any] = {"feeds": {}}
+        for fs in self._feeds:
+            st["feeds"][fs.name] = {
+                "source_index": fs.source_index,
+                "groups": [[op.snapshot() for op in g.all_ops()]
+                           for g in fs.groups],
+            }
+        if self.server.gate is not None:
+            st["gate"] = self.server.gate.snapshot()
+        return st
+
+    def restore(self, st: Dict[str, Any]) -> None:
+        """Resume from a snapshot: replay each feed's stream to its
+        recorded offset (the caller positions the streams, exactly like
+        ``StreamRuntime``), restore operator + gating state, and suppress
+        the next ``run``'s warmup reset."""
+        assert set(st["feeds"]) == {fs.name for fs in self._feeds}
+        for fs in self._feeds:
+            fst = st["feeds"][fs.name]
+            fs.source_index = fst["source_index"]
+            assert len(fst["groups"]) == len(fs.groups)
+            for g, states in zip(fs.groups, fst["groups"]):
+                ops = g.all_ops()
+                assert len(ops) == len(states)
+                for op, s in zip(ops, states):
+                    op.restore(s)
+        if st.get("gate") is not None and self.server.gate is not None:
+            self.server.gate.restore(st["gate"])
+        self._restored = True
+
+    # ------------------------------------------------------------------
     def _settle(self, fs: _FeedState) -> int:
         """Resume fulfilled continuations of one feed in FIFO order per
         group lane (so stateful post-extract ops observe stream order);
@@ -299,6 +345,10 @@ class MultiStreamRuntime:
             fs.source_index = 0
             for g in fs.groups:
                 g.reset_accumulators()
+        if self.server.gate is not None:
+            # keyframes learned from warmup frames must not leak into the
+            # measured stream — the gate resets exactly like the ops do
+            self.server.gate.reset()
         self.server.reset_stats()
 
     # ------------------------------------------------------------------
@@ -308,7 +358,8 @@ class MultiStreamRuntime:
 
         ``warmup=1`` (default) makes this a *fresh* measurement — streams
         rewound, every op reset — exactly like ``StreamRuntime.run``; pass
-        ``warmup=0`` to continue previous segments.  Either way, sinks and
+        ``warmup=0`` to continue previous segments (the first run after
+        ``restore()`` continues automatically).  Either way, sinks and
         per-run accumulators start empty."""
         if isinstance(n_frames, int):
             frames_by_feed = {fs.name: n_frames for fs in self._feeds}
@@ -321,8 +372,9 @@ class MultiStreamRuntime:
             fs.labels = []
             for g in fs.groups:
                 g.begin_run()
-        if warmup:
+        if warmup and not self._restored:
             self._warmup()
+        self._restored = False
         # per-run (not lifetime) model load, per prefix/tail component —
         # the same convention as the single-stream executors
         mllm_start = {
@@ -431,6 +483,17 @@ class MultiStreamRuntime:
                 per_query=per_query,
                 plan=self.forests[fs.name].describe(),
             )
+        gate = self.server.gate
+        if gate is not None and gate.active and \
+                getattr(self.planner, "catalog", None) is not None:
+            # close the cost-model loop: the measured per-feed hit rates
+            # land in the planner's catalog, so the next planning pass
+            # (SharingTreePlanner / FleetOptimizer) prices gated extracts
+            # at their observed, not assumed, model load
+            for fs in self._feeds:
+                if gate.served(fs.name):
+                    self.planner.catalog.record_gate_hit_rate(
+                        fs.name, gate.hit_rate(fs.name))
         return MultiStreamResult(
             fps=total_qframes / wall,
             wall_s=wall,

@@ -129,7 +129,7 @@ def chain_reach(ops: List[Op], catalog=None) -> float:
 
 
 def chain_cost_us(ops: List[Op], catalog=None, micro_batch: int = 16,
-                  reach: float = 1.0) -> float:
+                  reach: float = 1.0, gate_hit_rate: float = 0.0) -> float:
     """Per-source-frame cost of a chain, selectivity- and overhead-aware.
 
     Each op's *marginal* cost is weighted by the fraction of source frames
@@ -141,10 +141,22 @@ def chain_cost_us(ops: List[Op], catalog=None, micro_batch: int = 16,
     the op is invoked ``min(1, m)`` times per batch — an op starved by
     upstream filters still pays its dispatch whenever any frame arrives,
     which is precisely the term a shared prefix (paid once) amortizes
-    over its member queries (paid k times solo)."""
+    over its member queries (paid k times solo).
+
+    ``gate_hit_rate`` is the semantic tier's measured temporal-redundancy
+    hit rate (``CostCatalog.gate_hit_rates``): that fraction of frames
+    reaching an MLLM extract is answered from the keyframe cache instead
+    of paying the model's marginal cost, so the extract's per-frame term
+    scales by ``1 − hit_rate``.  The extract's *fixed* dispatch overhead
+    is still paid (a batch with any novel row still launches a forward),
+    which keeps the coalescing and sharing terms honest under gating."""
     total = 0.0
+    discount = 1.0 - min(max(gate_hit_rate, 0.0), 1.0)
     for op in ops:
-        total += reach * op_cost_us(op, catalog)
+        us = op_cost_us(op, catalog)
+        if discount < 1.0 and isinstance(op, MLLMExtractOp):
+            us *= discount
+        total += reach * us
         over = op_overhead_us(op, catalog)
         if over > 0.0:
             m = reach * micro_batch
@@ -297,13 +309,35 @@ class SharingTreePlanner:
     raise it to bias toward independent execution (e.g. when per-query
     isolation matters more than model load).  ``catalog`` (a
     ``repro.core.costs.CostCatalog``) supplies calibrated fallback costs
-    for ops the optimizer has not stamped individually."""
+    for ops the optimizer has not stamped individually.
+
+    ``gate_hit_rate`` prices the semantic gating tier into every share
+    decision: with a fraction of extract frames answered from the
+    keyframe cache, the model-load saving that justifies sharing shrinks
+    by the same fraction on both sides of the comparison — a share that
+    only paid off because of the full extract cost is correctly refused
+    once gating absorbs most of that cost.  Defaults to the catalog's
+    measured mean when a catalog is supplied (0 with no measurements)."""
 
     def __init__(self, min_saving_us: float = 0.0, catalog=None,
-                 micro_batch: int = 16):
+                 micro_batch: int = 16,
+                 gate_hit_rate: Optional[float] = None):
         self.min_saving_us = min_saving_us
         self.catalog = catalog
         self.micro_batch = micro_batch
+        self._gate_hit_rate = gate_hit_rate
+
+    @property
+    def gate_hit_rate(self) -> float:
+        """Explicit override, else the catalog's measured mean (resolved
+        lazily — gated runs record their rates after the planner is
+        built)."""
+        if self._gate_hit_rate is not None:
+            return self._gate_hit_rate
+        if self.catalog is not None and \
+                hasattr(self.catalog, "mean_gate_hit_rate"):
+            return self.catalog.mean_gate_hit_rate()
+        return 0.0
 
     # ------------------------------------------------------------------
     def _group(self, plans: List[Plan]) -> SharingGroup:
@@ -324,11 +358,14 @@ class SharingTreePlanner:
         # same ops through its own leading chain — an asymmetry here would
         # misprice every share the min_saving_us gate decides on
         p_reach = chain_reach(exe.prefix, self.catalog)
-        shared = chain_cost_us(exe.prefix, self.catalog, self.micro_batch) \
+        h = self.gate_hit_rate
+        shared = chain_cost_us(exe.prefix, self.catalog, self.micro_batch,
+                               gate_hit_rate=h) \
             + sum(chain_cost_us(tail, self.catalog, self.micro_batch,
-                                reach=p_reach)
+                                reach=p_reach, gate_hit_rate=h)
                   for tail in exe.tails)
-        indep = sum(chain_cost_us(p.ops, self.catalog, self.micro_batch)
+        indep = sum(chain_cost_us(p.ops, self.catalog, self.micro_batch,
+                                  gate_hit_rate=h)
                     for p in plans)
         return SharingGroup(execution=exe, shared_cost_us=shared,
                             indep_cost_us=indep)

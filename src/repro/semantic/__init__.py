@@ -1,0 +1,44 @@
+"""Semantic gating tier: temporal-redundancy extract cache in front of the
+shared MLLM.
+
+The paper's semantic transformations cut MLLM load by exploiting what the
+*data* means, not just what the query asks: consecutive frames of a fixed
+camera are overwhelmingly near-duplicates, and a near-duplicate of a frame
+the model already described does not need another forward.  This package
+is that tier, sitting between the prefix operators and the model:
+
+* ``TemporalSignature`` (``signature``) — a jitted, batched per-frame
+  signature: downsampled patch means plus a cheap random-projection
+  embedding, computed once per micro-batch alongside the existing prefix
+  pass.  Distances between signatures classify each surviving frame as
+  *novel* or a *near-duplicate* of a recent keyframe.
+
+* ``SemanticExtractCache`` (``cache``) — keyed by (feed, variant,
+  signature bucket): novel frames become keyframe entries whose extract
+  outputs answer subsequent near-duplicates without a forward.  A
+  configurable **revalidation budget** sends every Nth hit through the
+  model anyway and *compares*: hit/miss/revalidation/mismatch rates are
+  measured, never assumed, so semantic drift (the scene changed but the
+  signature did not) is detected instead of silently corrupting answers.
+
+* ``AdmissionController`` (``admission``) — tunes the similarity
+  threshold per feed online: when the revalidation mismatch rate crosses
+  the configured accuracy budget the threshold tightens sharply (fewer
+  frames admitted to the cache path), and it recovers slowly — never past
+  the configured base — while revalidations keep coming back clean.
+
+* ``SemanticGate`` (``gate``) — the facade the serving tier talks to:
+  ``admit(feed, variant, frames)`` returns an ``Admission`` that splits a
+  batch into model rows and cache rows, and later assembles the combined
+  per-task predictions once the model rows' forward completes (results may
+  still be in flight — the gate composes with the pipelined
+  dispatch/poll/resume serving protocol).
+
+Gating is *off* by default everywhere (``OpContext.gate is None``), and a
+gate configured with ``threshold=0`` is inert: every frame takes the
+exact pre-gate path, bitwise.
+"""
+from repro.semantic.admission import AdmissionController
+from repro.semantic.cache import Admission, SemanticExtractCache
+from repro.semantic.gate import GateConfig, SemanticGate
+from repro.semantic.signature import TemporalSignature

@@ -1,0 +1,121 @@
+"""Temporal frame signatures: cheap, batched, jitted.
+
+A signature is two views of a downsampled frame:
+
+* ``feats`` — per-channel patch means on a coarse grid (≤ 8×16 cells).
+  The mean absolute delta between two frames' grids is a spatially-aware
+  activity measure (the same physics ``SkipOp``'s frame-diff exploits:
+  a car cannot teleport between cells).
+* ``emb`` — a fixed random projection of the grid to a small vector.
+  L2 distance in this space is a *content* measure that is cheap to
+  compare and to quantize: its coarse quantization is the cache's
+  **signature bucket**, so re-visiting a previously-seen scene (the empty
+  road between cars) lands on the keyframe that described it.
+
+Both are computed in one jitted call per submitted batch — the signature
+rides the existing prefix pass, it never adds a second sweep over the
+frames.  Raw (uint8-range) vs already-normalized rows are decided **per
+frame**, the ``make_extract_fn`` convention, so a gate in front of the
+``SharedExtractServer`` scores mixed-stage coalesced traffic exactly like
+uniform batches.  Inputs are padded to the power-of-two bucket before the
+jitted call (compiled shapes stay logarithmic in batch size) and the pad
+rows sliced off.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.streaming.operators import _bucket_pad
+
+#: dimensionality of the random-projection embedding (bucket keys are
+#: tuples of this many quantized ints)
+EMB_DIM = 16
+
+#: fixed seed for the projection — signatures must be stable across
+#: processes, or a restored cache snapshot would never hit again
+_PROJ_SEED = 7
+
+
+def _grid(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``target`` (pooling needs exact
+    tiling; frame dims here are crops/downscales of 128×256, so a good
+    divisor always exists)."""
+    for g in range(min(target, n), 0, -1):
+        if n % g == 0:
+            return g
+    return 1
+
+
+class TemporalSignature:
+    """Batched signature extractor with one compiled program per
+    (frame shape, dtype, padded batch size)."""
+
+    def __init__(self, grid: Tuple[int, int] = (8, 16)):
+        self.grid = grid
+        self._fns: Dict[Tuple, object] = {}
+        self._projs: Dict[Tuple, np.ndarray] = {}
+
+    # ------------------------------------------------------------------
+    def _fn(self, shape: Tuple[int, int, int], dtype_str: str):
+        key = shape + (dtype_str,)
+        if key in self._fns:
+            return self._fns[key]
+        c, h, w = shape
+        gy, gx = _grid(h, self.grid[0]), _grid(w, self.grid[1])
+        d = c * gy * gx
+        rng = np.random.RandomState(_PROJ_SEED)
+        proj = rng.standard_normal((d, EMB_DIM)).astype(np.float32)
+        proj /= np.sqrt(d)
+        self._projs[key] = proj
+
+        @jax.jit
+        def fn(frames):
+            x = frames.astype(jnp.float32)
+            # per-frame raw detection (the make_extract_fn convention)
+            raw = x.reshape(x.shape[0], -1).max(axis=1) > 8.0
+            x = jnp.where(raw[:, None, None, None],
+                          (x / 255.0 - 0.5) / 0.25, x)
+            p = x.reshape(x.shape[0], c, gy, h // gy, gx, w // gx)
+            feats = p.mean(axis=(3, 5)).reshape(x.shape[0], d)
+            emb = feats @ jnp.asarray(proj)
+            return feats, emb
+
+        self._fns[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    def features(self, frames: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """(n, C, H, W) frames -> (feats (n, D), emb (n, EMB_DIM))."""
+        assert frames.ndim == 4 and frames.shape[0] > 0, frames.shape
+        n = frames.shape[0]
+        bucket = _bucket_pad(n)
+        if bucket != n:
+            pad = np.zeros((bucket - n,) + frames.shape[1:], frames.dtype)
+            frames = np.concatenate([frames, pad], 0)
+        fn = self._fn(tuple(frames.shape[1:]), frames.dtype.str)
+        feats, emb = fn(frames)
+        return np.asarray(feats)[:n], np.asarray(emb)[:n]
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def distance(feats_a: np.ndarray, emb_a: np.ndarray,
+                 feats_b: np.ndarray, emb_b: np.ndarray) -> float:
+        """Scalar dissimilarity of two frames' signatures: patch-grid
+        activity and embedding distance, equally weighted.  0.0 for
+        identical frames; ~O(1) for unrelated scenes."""
+        patch = float(np.abs(feats_a - feats_b).mean())
+        emb = float(np.linalg.norm(emb_a - emb_b)) / np.sqrt(EMB_DIM)
+        return 0.5 * patch + 0.5 * emb
+
+    @staticmethod
+    def bucket(emb: np.ndarray, width: float) -> Tuple[int, ...]:
+        """Quantize one embedding to its cache bucket.  Coarse on purpose:
+        a boundary straddle costs at worst an extra model forward (the
+        cache's newest-keyframe fallback usually recovers it), never a
+        wrong answer."""
+        return tuple(int(q) for q in np.floor(emb / max(width, 1e-9)))

@@ -188,12 +188,17 @@ class MultiQueryRuntime(RunScaffold):
 
     # ------------------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
-        return {
+        st = {
             "source_index": self._source_index,
             "prefix": [op.snapshot() for op in self.shared.prefix],
             "tails": [[op.snapshot() for op in tail]
                       for tail in self.shared.tails],
         }
+        if self.server is not None and self.server.gate is not None:
+            # the server path gates under this runtime's feed label; the
+            # solo path's gate state rides the extract op's own snapshot
+            st["gate"] = self.server.gate.snapshot_feed("mq")
+        return st
 
     def restore(self, st: Dict[str, Any]) -> None:
         self._source_index = st["source_index"]
@@ -202,6 +207,9 @@ class MultiQueryRuntime(RunScaffold):
         for tail, states in zip(self.shared.tails, st["tails"]):
             for op, s in zip(tail, states):
                 op.restore(s)
+        if st.get("gate") is not None and self.server is not None \
+                and self.server.gate is not None:
+            self.server.gate.restore_feed("mq", st["gate"])
         self._mark_restored()
 
     # ------------------------------------------------------------------
@@ -295,6 +303,8 @@ class MultiQueryRuntime(RunScaffold):
         self._begin_run(stream, warmup, warm_advance, self._all_ops())
         if fresh:
             g.reset_accumulators()
+            if self.server.gate is not None:
+                self.server.gate.reset("mq")   # no warmup keyframe leaks
             self.server.reset_stats()
         prefix_mllm_start = mllm_frames_of(self.shared.prefix)
         tail_mllm_start = [mllm_frames_of(tail)

@@ -111,6 +111,10 @@ class OpContext:
     mllm_pruned_params: Any = None
     detector: Any = None
     detector_params: Any = None
+    #: optional ``repro.semantic.SemanticGate`` — the temporal-redundancy
+    #: extract cache.  None (default) keeps every extract path exactly as
+    #: it was; an *inactive* gate (threshold 0) is equally inert.
+    gate: Any = None
     frame_shape: Tuple[int, int, int] = (3, 128, 256)
     #: micro-batch size the driving runtime uses — operators that estimate
     #: stream density (adaptive pruning) read it instead of guessing
@@ -413,6 +417,10 @@ class MLLMExtractOp(Op):
         wanted = ("big", "pruned") if self.model == "adaptive" \
             else (self.model,)
         self._runs = {v: make_extract_fn(*variants[v]) for v in wanted}
+        # semantic gating (solo path): the server route consults the gate
+        # inside SharedExtractServer.submit instead, keyed by feed name
+        self._gate = ctx.gate
+        self._gate_feed = f"op:{id(self)}"
 
     def resolve_variant(self, n: int) -> str:
         """Pick the physical variant for a batch of ``n`` surviving frames.
@@ -431,7 +439,15 @@ class MLLMExtractOp(Op):
         """Account ``n`` frames of model load and resolve the variant —
         the shared half of process(); the SharedExtractServer route calls
         this then ships the un-padded frames to the server instead of
-        running the op's own jitted program."""
+        running the op's own jitted program.
+
+        ``frames_processed`` (and hence every runtime's ``mllm_frames``)
+        counts frames *reaching* the extract — the logical model load the
+        plan-level optimizations are scored on.  With semantic gating the
+        cache tier absorbs part of it downstream: the frames that
+        actually paid a forward are the gate/server counters
+        (``cache_misses + revalidations``, the server's ``frames``), so
+        gated and ungated runs stay comparable on both axes."""
         self.frames_processed += n
         return self.resolve_variant(n)
 
@@ -446,34 +462,59 @@ class MLLMExtractOp(Op):
         batch["attrs"] = attrs
         return batch
 
+    def _forward(self, variant: str, frames: np.ndarray, n: int):
+        """One bucket-padded jitted forward over ``frames[:n]``."""
+        bucket = _bucket_pad(n)
+        if bucket != n:
+            pad = np.zeros((bucket - n,) + frames.shape[1:], frames.dtype)
+            frames = np.concatenate([frames, pad], 0)
+        self.forwards += 1
+        return self._runs[variant](jnp.asarray(frames))
+
     def process(self, batch: Batch) -> Batch:
         n = batch["frames"].shape[0]
         if n == 0:
             return batch
         variant = self.begin_extract(n)
-        bucket = _bucket_pad(n)
-        frames = batch["frames"]
-        if bucket != n:
-            pad = np.zeros((bucket - n,) + frames.shape[1:], frames.dtype)
-            frames = np.concatenate([frames, pad], 0)
-        self.forwards += 1
-        preds = self._runs[variant](jnp.asarray(frames))
+        gate = self._gate
+        if gate is not None and gate.active:
+            # cache-consult stage: near-duplicates of a recent keyframe
+            # are answered from the semantic cache; only novel frames and
+            # revalidation hits pay the forward
+            adm = gate.admit(self._gate_feed, variant, batch["frames"])
+            if adm.n_model:
+                mf = adm.model_frames(batch["frames"])
+                preds = self._forward(variant, mf, adm.n_model)
+                adm.bind({k: np.asarray(v)[:adm.n_model]
+                          for k, v in preds.items()})
+            else:
+                adm.bind(None)
+            return self.apply_preds(batch, adm.assemble(), n)
+        preds = self._forward(variant, batch["frames"], n)
         return self.apply_preds(batch, preds, n)
 
     def reset(self):
         self.frames_processed = 0
         self.forwards = 0
         self._density_ema = 0.5
+        if getattr(self, "_gate", None) is not None:
+            self._gate.reset(self._gate_feed)
 
     def snapshot(self):
-        return {"frames_processed": self.frames_processed,
-                "forwards": self.forwards,
-                "density_ema": self._density_ema}
+        st = {"frames_processed": self.frames_processed,
+              "forwards": self.forwards,
+              "density_ema": self._density_ema}
+        if getattr(self, "_gate", None) is not None and self._gate.active:
+            st["gate"] = self._gate.snapshot_feed(self._gate_feed)
+        return st
 
     def restore(self, st):
         self.frames_processed = st["frames_processed"]
         self.forwards = st.get("forwards", 0)
         self._density_ema = st.get("density_ema", 0.5)
+        if st.get("gate") is not None \
+                and getattr(self, "_gate", None) is not None:
+            self._gate.restore_feed(self._gate_feed, st["gate"])
 
 
 # ===========================================================================

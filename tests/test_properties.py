@@ -299,6 +299,85 @@ def test_pipelined_serving_equals_synchronous_drain(stream_ctx, data):
     assert pipe.mllm_frames == sync.mllm_frames
 
 
+# ---------------------------------------------------------------------------
+# semantic gating tier properties
+# ---------------------------------------------------------------------------
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_gate_revalidation_always_fires_within_budget(data):
+    """Model-free gate invariant over random frame sequences (scenes with
+    random revisits): no keyframe ever serves ``revalidate_every``
+    consecutive answers without a model check, every admitted frame is
+    classified exactly once, and a keyframe with enough lifetime hits has
+    revalidated at least once."""
+    from repro.semantic import GateConfig, SemanticGate
+
+    every = data.draw(st.integers(2, 6), label="revalidate_every")
+    gate = SemanticGate(GateConfig(threshold=0.05,
+                                   revalidate_every=every))
+    scenes = [-1.5, -0.5, 0.5, 1.5]
+    n_frames = 0
+    for _ in range(data.draw(st.integers(1, 6), label="batches")):
+        vals = data.draw(st.lists(st.sampled_from(scenes), min_size=1,
+                                  max_size=8), label="frames")
+        frames = np.stack([np.full((3, 16, 16), v, np.float32)
+                           for v in vals])
+        n_frames += len(vals)
+        adm = gate.admit("f", "big", frames)
+        adm.bind({"present": np.zeros(adm.n_model, np.int32)}
+                 if adm.n_model else None)
+        adm.assemble()
+        for entries in gate.cache._feeds.values():
+            for e in entries.values():
+                assert e.since_reval < every
+                if e.hits >= every:
+                    assert e.validations >= 1
+    c = gate.counters
+    assert c["cache_hits"] + c["cache_misses"] + c["revalidations"] \
+        == n_frames
+    assert c["cache_mismatches"] == 0          # fake model never drifts
+
+
+@pytest.mark.slow
+@given(data=st.data())
+@settings(max_examples=3, deadline=None)
+def test_gate_threshold_zero_is_bitwise_identity(stream_ctx, data):
+    """A semantic gate with threshold=0 (gating off) leaves the serving
+    tier bitwise identical to the pre-gate behavior for random catalog
+    workloads — the no-regression contract of the semantic tier."""
+    from repro.data import TollBoothStream, VolleyballStream
+    from repro.queries import QUERIES, get_query
+    from repro.scheduler import Feed, MultiStreamRuntime, SharedExtractServer
+    from repro.semantic import GateConfig, SemanticGate
+
+    qids = data.draw(st.lists(st.sampled_from(_catalog()), min_size=1,
+                              max_size=4, unique=True))
+    seed = data.draw(st.integers(0, 2**16 - 1))
+    datasets = sorted({QUERIES[q].dataset for q in qids})
+
+    def feeds():
+        return [Feed(ds,
+                     TollBoothStream(seed=seed) if ds == "tollbooth"
+                     else VolleyballStream(seed=seed),
+                     [get_query(q).naive_plan() for q in qids
+                      if QUERIES[q].dataset == ds])
+                for ds in datasets]
+
+    base = MultiStreamRuntime(feeds(), stream_ctx, micro_batch=16).run(32)
+    gate = SemanticGate(GateConfig(threshold=0.0))
+    off = MultiStreamRuntime(
+        feeds(), stream_ctx, micro_batch=16,
+        server=SharedExtractServer(stream_ctx, gate=gate)).run(32)
+    for ds in datasets:
+        for qid, bq in base.feeds[ds].per_query.items():
+            oq = off.feeds[ds].per_query[qid]
+            assert oq.outputs == bq.outputs
+            assert oq.window_results == bq.window_results
+    assert off.server_stats["cache_hits"] == 0
+    assert off.server_stats["forwards"] == base.server_stats["forwards"]
+
+
 @pytest.mark.slow
 @given(data=st.data())
 @settings(max_examples=5, deadline=None)

@@ -1,0 +1,470 @@
+"""Semantic gating tier tests.
+
+Covers the subsystem's contract at three levels: (a) model-free —
+temporal signatures, cache hits/misses, the revalidation budget, the
+accuracy-budgeted admission controller, LRU bounds, snapshot/restore of
+gating state; (b) with models — the solo ``MLLMExtractOp`` cache-consult
+path and the ``SharedExtractServer`` cache-consult stage (including hits
+on keyframes whose forwards are still in flight — the pipelined donor
+path), with the no-regression guarantee that a disabled gate
+(threshold=0) is bitwise identical to the ungated tier; (c) the
+``MultiStreamRuntime`` snapshot/restore round-trip (per-feed source
+offsets + drain barrier + gating/cache state, bitwise vs an uninterrupted
+run) and the hit-rate-aware cost model.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.semantic import GateConfig, SemanticGate, TemporalSignature
+
+
+@pytest.fixture(scope="module")
+def ctx(stream_ctx):
+    return stream_ctx
+
+
+def _scene(value: float, shape=(3, 32, 64)) -> np.ndarray:
+    """One deterministic already-normalized frame (max <= 8)."""
+    f = np.full(shape, value, np.float32)
+    f[:, ::4, ::4] = -value
+    return f
+
+
+def _frames(*values) -> np.ndarray:
+    return np.stack([_scene(v) for v in values])
+
+
+def _fake_preds(n: int, tag: int = 0):
+    return {"present": np.full(n, tag, np.int32),
+            "plate": np.full((n, 6), tag, np.int32)}
+
+
+def _pump(gate, feed, frames, tag=0):
+    """Admit one batch and answer its model rows with fake predictions."""
+    adm = gate.admit(feed, "big", frames)
+    adm.bind(_fake_preds(adm.n_model, tag) if adm.n_model else None)
+    return adm, adm.assemble()
+
+
+# ---------------------------------------------------------------------------
+# (a) model-free: signature, cache, budget, controller
+# ---------------------------------------------------------------------------
+
+def test_signature_distance_and_buckets():
+    sig = TemporalSignature()
+    a = _frames(0.5)
+    b = _frames(0.5)
+    c = _frames(-1.5)
+    fa, ea = sig.features(a)
+    fb, eb = sig.features(b)
+    fc, ec = sig.features(c)
+    assert TemporalSignature.distance(fa[0], ea[0], fb[0], eb[0]) == 0.0
+    far = TemporalSignature.distance(fa[0], ea[0], fc[0], ec[0])
+    assert far > 0.1
+    # a tiny perturbation stays near; buckets are stable for equal frames
+    noisy = a + 0.001
+    fn, en = sig.features(noisy)
+    assert TemporalSignature.distance(fa[0], ea[0], fn[0], en[0]) < 0.01
+    assert TemporalSignature.bucket(ea[0], 0.5) == \
+        TemporalSignature.bucket(eb[0], 0.5)
+    # raw (uint8-range) and normalized views of one frame agree per frame
+    raw = ((a * 0.25 + 0.5) * 255.0).astype(np.float32)
+    fr, er = sig.features(raw)
+    assert TemporalSignature.distance(fa[0], ea[0], fr[0], er[0]) < 1e-4
+
+
+def test_gate_hits_misses_and_revalidation_budget():
+    gate = SemanticGate(GateConfig(threshold=0.05, revalidate_every=4))
+    frames = _frames(0.5, 0.5, 0.5, 0.5)
+    adm, out = _pump(gate, "f", frames, tag=7)
+    # row 0 is novel; rows 1-3 are intra-batch near-duplicates of it
+    assert gate.counters["cache_misses"] == 1
+    assert gate.counters["cache_hits"] == 3
+    assert np.array_equal(out["present"], np.full(4, 7, np.int32))
+    # 4th hit on the keyframe revalidates (within-budget drift detection)
+    adm2, out2 = _pump(gate, "f", frames, tag=7)
+    assert gate.counters["revalidations"] == 1
+    assert gate.counters["cache_mismatches"] == 0
+    assert np.array_equal(out2["present"], np.full(4, 7, np.int32))
+    # the budget invariant: no keyframe ever serves `revalidate_every`
+    # consecutive answers without a model check
+    for entries in gate.cache._feeds.values():
+        for e in entries.values():
+            assert e.since_reval < gate.config.revalidate_every
+
+
+def test_gate_mismatch_tightens_threshold_and_repairs_keyframe():
+    gate = SemanticGate(GateConfig(threshold=0.05, revalidate_every=2,
+                                   accuracy_budget=0.05))
+    frames = _frames(0.5, 0.5)
+    _pump(gate, "f", frames, tag=1)          # novel + 1 hit
+    # next hit revalidates; the model now answers differently -> mismatch
+    adm, out = _pump(gate, "f", frames, tag=2)
+    assert gate.counters["revalidations"] >= 1
+    assert gate.counters["cache_mismatches"] >= 1
+    thr = gate.controller.threshold("f")
+    assert thr < gate.config.threshold       # tightened
+    assert thr > 0.0                         # never fully closes
+    # the drifted keyframe was refreshed with the fresh answer
+    adm3, out3 = _pump(gate, "f", frames, tag=2)
+    assert out3["present"][0] == 2
+    # clean revalidations recover the threshold, never past the base
+    for _ in range(200):
+        gate.controller.observe("f", False)
+    assert gate.controller.threshold("f") == \
+        pytest.approx(gate.config.threshold)
+
+
+def test_gate_cache_is_bounded_lru():
+    gate = SemanticGate(GateConfig(threshold=0.05, max_entries=4))
+    for i in range(10):
+        _pump(gate, "f", _frames(-2.0 + i * 0.45), tag=i)
+    assert len(gate.cache._feeds["f"]) <= 4
+    assert gate.counters["cache_misses"] == 10
+
+
+def test_gate_snapshot_restore_roundtrip_model_free():
+    gate = SemanticGate(GateConfig(threshold=0.05, revalidate_every=4))
+    frames = _frames(0.5, 0.5, -1.5)
+    _pump(gate, "f", frames, tag=3)
+    gate.controller.observe("f", True)
+    st = gate.snapshot()
+
+    g2 = SemanticGate(GateConfig(threshold=0.05, revalidate_every=4))
+    g2.restore(st)
+    assert g2.counters == gate.counters
+    assert g2.controller.threshold("f") == gate.controller.threshold("f")
+    # the restored keyframes answer exactly like the originals
+    a1, o1 = _pump(gate, "f", frames, tag=9)
+    a2, o2 = _pump(g2, "f", frames, tag=9)
+    assert a1.n_model == a2.n_model
+    for k in o1:
+        assert np.array_equal(o1[k], o2[k])
+
+
+def test_gate_reset_scopes_to_feed():
+    gate = SemanticGate(GateConfig(threshold=0.05))
+    _pump(gate, "a", _frames(0.5))
+    _pump(gate, "b", _frames(0.5))
+    gate.reset("a")
+    assert "a" not in gate.cache._feeds and "b" in gate.cache._feeds
+    gate.reset()
+    assert not gate.cache._feeds
+
+
+# ---------------------------------------------------------------------------
+# (a') hit-rate-aware cost model
+# ---------------------------------------------------------------------------
+
+def test_chain_cost_discounts_extract_by_gate_hit_rate():
+    from repro.queries import get_query
+    from repro.scheduler.sharing_tree import SharingTreePlanner, chain_cost_us
+
+    ops = get_query("Q2").naive_plan().ops
+    full = chain_cost_us(ops, micro_batch=16)
+    half = chain_cost_us(ops, micro_batch=16, gate_hit_rate=0.5)
+    none = chain_cost_us(ops, micro_batch=16, gate_hit_rate=1.0)
+    assert none < half < full
+    # only the extract term is discounted: the cheap tail survives intact
+    assert full - half == pytest.approx((full - none) / 2)
+    # the planner prices shares with the discount: savings shrink with h
+    plans = [get_query(q).naive_plan() for q in ("Q2", "Q6")]
+    s0 = SharingTreePlanner().plan(plans).groups()[0].saving_us
+    s9 = SharingTreePlanner(gate_hit_rate=0.9).plan(plans)
+    s9 = s9.groups()[0].saving_us
+    assert 0 < s9 < s0
+
+
+def test_cost_catalog_gate_hit_rates_roundtrip(tmp_path):
+    from repro.core.costs import CostCatalog
+
+    cat = CostCatalog()
+    assert cat.mean_gate_hit_rate() == 0.0
+    cat.record_gate_hit_rate("tb0", 0.8)
+    cat.record_gate_hit_rate("vb0", 0.2)
+    cat.record_gate_hit_rate("tb0", 0.4)        # EMA-merged
+    assert 0.4 < cat.gate_hit_rates["tb0"] < 0.8
+    path = str(tmp_path / "cat.json")
+    cat.save(path)
+    back = CostCatalog.load(path)
+    assert back.gate_hit_rates == cat.gate_hit_rates
+    assert back.mean_gate_hit_rate() == pytest.approx(
+        cat.mean_gate_hit_rate())
+
+
+# ---------------------------------------------------------------------------
+# (b) with models: solo op path + server cache-consult stage
+# ---------------------------------------------------------------------------
+
+def test_server_stats_is_cached_view(ctx):
+    from repro.scheduler import SharedExtractServer
+
+    srv = SharedExtractServer(ctx, gate=SemanticGate(GateConfig()))
+    view = srv.stats
+    assert srv.stats is view                  # one dict, not rebuilt
+    for k in ("cache_hits", "cache_misses", "revalidations",
+              "cache_mismatches"):
+        assert view[k] == 0
+    srv.reset_stats()
+    assert srv.stats is view                  # reset updates in place
+
+
+def test_solo_op_disabled_gate_is_bitwise_identical(ctx):
+    from repro.data import TollBoothStream
+    from repro.queries import get_query
+    from repro.streaming.runtime import StreamRuntime
+
+    plain = StreamRuntime(get_query("Q2").naive_plan(), ctx,
+                          micro_batch=16).run(TollBoothStream(seed=3), 48)
+    gctx = dataclasses.replace(
+        ctx, gate=SemanticGate(GateConfig(threshold=0.0)))
+    gated = StreamRuntime(get_query("Q2").naive_plan(), gctx,
+                          micro_batch=16).run(TollBoothStream(seed=3), 48)
+    assert gated.outputs == plain.outputs
+    assert gated.window_results == plain.window_results
+    assert gctx.gate.counters["cache_misses"] == 0    # never consulted
+
+
+def test_solo_op_gated_skips_redundant_forwards(ctx):
+    from repro.data import TollBoothStream
+    from repro.queries import get_query
+    from repro.streaming.plan import Plan
+    from repro.streaming.runtime import StreamRuntime
+
+    gate = SemanticGate(GateConfig(threshold=0.06, revalidate_every=8))
+    gctx = dataclasses.replace(ctx, gate=gate)
+    plan = get_query("Q2").naive_plan()
+    rt = StreamRuntime(plan, gctx, micro_batch=16)
+    res = rt.run(TollBoothStream(seed=3), 64)
+    assert gate.counters["cache_hits"] > 0
+    served = sum(gate.counters[k] for k in
+                 ("cache_hits", "cache_misses", "revalidations"))
+    # every frame classified exactly once: 64 measured + the untimed
+    # 16-frame warmup batch (op.reset drops keyframes, not accounting)
+    assert served == 64 + 16
+    # model load accounting is unchanged (frames reaching the extract);
+    # the *cache* is what absorbed the redundant fraction
+    assert res.mllm_frames == 64
+    assert 0.0 <= get_query("Q2").evaluate(res) <= 1.0
+
+
+def test_server_gated_submit_short_circuits_dispatch(ctx):
+    from repro.data import TollBoothStream
+    from repro.scheduler import SharedExtractServer
+
+    gate = SemanticGate(GateConfig(threshold=0.06, revalidate_every=100))
+    srv = SharedExtractServer(ctx, gate=gate)
+    f1 = TollBoothStream(seed=3).batch(1)[0].astype(np.float32)
+    frames = np.repeat(f1, 6, axis=0)         # 6 identical rows
+    r1 = srv.submit("big", frames, feed="a")
+    assert srv.pending_frames("a") == 1       # only the novel row queued
+    assert srv.drain() == 1
+    assert r1.done
+    base = r1.result
+    # every row equals the keyframe's answer
+    for task in base:
+        assert all(np.array_equal(base[task][i], base[task][0])
+                   for i in range(6))
+    # a fully-cached batch never touches the dispatch queue
+    forwards = srv.stats["forwards"]
+    r2 = srv.submit("big", frames, feed="a")
+    assert srv.pending_frames("a") == 0
+    assert r2.done                            # short-circuited: no drain
+    assert srv.stats["forwards"] == forwards
+    for task in base:
+        assert np.array_equal(r2.result[task], base[task])
+    assert srv.stats["cache_hits"] == 5 + 6
+    assert srv.stats["requests"] == 2
+
+
+def test_server_gated_hits_on_inflight_keyframes(ctx):
+    # the pipelined donor path: batch 2 hits keyframes whose forward
+    # (from batch 1) has not retired yet — batch 2 reports done only once
+    # the donor completes, then serves the donor's rows
+    from repro.data import TollBoothStream
+    from repro.scheduler import SharedExtractServer
+
+    gate = SemanticGate(GateConfig(threshold=0.06, revalidate_every=100))
+    srv = SharedExtractServer(ctx, gate=gate, max_inflight=2)
+    f1 = TollBoothStream(seed=5).batch(1)[0].astype(np.float32)
+    frames = np.repeat(f1, 4, axis=0)
+    r1 = srv.submit("big", frames, feed="a")
+    r2 = srv.submit("big", frames, feed="a")  # hits r1's pending keyframe
+    assert not r1.done and not r2.done
+    assert srv.pending_frames("a") == 1       # r2 queued nothing
+    srv.drain()
+    assert r1.done and r2.done
+    for task in r1.result:
+        assert np.array_equal(r2.result[task], r1.result[task])
+
+
+def test_multistream_disabled_gate_identity_and_revalidation(ctx):
+    from repro.data import TollBoothStream
+    from repro.queries import get_query
+    from repro.scheduler import Feed, MultiStreamRuntime, SharedExtractServer
+
+    def feeds():
+        return [Feed("tb", TollBoothStream(seed=11),
+                     [get_query(q).naive_plan() for q in ("Q2", "Q6")])]
+
+    base = MultiStreamRuntime(feeds(), ctx, micro_batch=16).run(48)
+    off = MultiStreamRuntime(
+        feeds(), ctx, micro_batch=16,
+        server=SharedExtractServer(
+            ctx, gate=SemanticGate(GateConfig(threshold=0.0)))).run(48)
+    for q in ("Q2", "Q6"):
+        assert off.feeds["tb"].per_query[q].outputs == \
+            base.feeds["tb"].per_query[q].outputs
+        assert off.feeds["tb"].per_query[q].window_results == \
+            base.feeds["tb"].per_query[q].window_results
+    assert off.server_stats["cache_hits"] == 0
+
+    gate = SemanticGate(GateConfig(threshold=0.06, revalidate_every=4))
+    on = MultiStreamRuntime(
+        feeds(), ctx, micro_batch=16,
+        server=SharedExtractServer(ctx, gate=gate)).run(48)
+    st = on.server_stats
+    assert st["cache_hits"] > 0
+    assert st["frames"] < base.server_stats["frames"]
+    # revalidation actually fired within its budget on a real stream
+    assert st["revalidations"] >= st["cache_hits"] // 4
+    assert on.mllm_frames == base.mllm_frames     # load metric unchanged
+
+
+def test_gated_run_records_hit_rates_in_catalog(ctx):
+    # the cost-model loop: a gated serving run lands its measured
+    # per-feed hit rates in the planner's catalog, so the next planning
+    # pass prices extracts at observed model load
+    from repro.core.costs import CostCatalog
+    from repro.data import TollBoothStream
+    from repro.queries import get_query
+    from repro.scheduler import (Feed, MultiStreamRuntime,
+                                 SharedExtractServer, SharingTreePlanner)
+
+    cat = CostCatalog()
+    planner = SharingTreePlanner(catalog=cat)
+    assert planner.gate_hit_rate == 0.0       # nothing measured yet
+    gate = SemanticGate(GateConfig(threshold=0.06))
+    ms = MultiStreamRuntime(
+        [Feed("tb", TollBoothStream(seed=11),
+              [get_query("Q2").naive_plan()])],
+        ctx, micro_batch=16, planner=planner,
+        server=SharedExtractServer(ctx, gate=gate))
+    ms.run(48)
+    assert cat.gate_hit_rates["tb"] == pytest.approx(gate.hit_rate("tb"))
+    assert planner.gate_hit_rate > 0.0        # the planner now discounts
+
+
+def test_multiquery_server_gated_path(ctx):
+    from repro.data import TollBoothStream
+    from repro.queries import get_query
+    from repro.scheduler import SharedExtractServer
+    from repro.streaming.multiquery import MultiQueryRuntime
+
+    def plans():
+        return [get_query(q).naive_plan() for q in ("Q2", "Q6")]
+
+    plain = MultiQueryRuntime(plans(), ctx, micro_batch=16).run(
+        TollBoothStream(seed=9), 48)
+    off = MultiQueryRuntime(
+        plans(), ctx, micro_batch=16,
+        server=SharedExtractServer(
+            ctx, gate=SemanticGate(GateConfig(threshold=0.0)))
+    ).run(TollBoothStream(seed=9), 48)
+    for q in ("Q2", "Q6"):
+        assert off.per_query[q].outputs == plain.per_query[q].outputs
+        assert off.per_query[q].window_results == \
+            plain.per_query[q].window_results
+
+    gate = SemanticGate(GateConfig(threshold=0.06, revalidate_every=4))
+    mq = MultiQueryRuntime(plans(), ctx, micro_batch=16,
+                           server=SharedExtractServer(ctx, gate=gate))
+    on = mq.run(TollBoothStream(seed=9), 48)
+    assert gate.counters["cache_hits"] > 0
+    assert on.mllm_frames == plain.mllm_frames
+    st = mq.snapshot()                    # gating state rides the snapshot
+    assert st["gate"] is not None
+
+
+# ---------------------------------------------------------------------------
+# (c) MultiStreamRuntime snapshot/restore (drain barrier + gating state)
+# ---------------------------------------------------------------------------
+
+def _ms_snapshot_feeds():
+    from repro.data import TollBoothStream, VolleyballStream
+    from repro.queries import get_query
+    from repro.scheduler import Feed
+    from repro.streaming.operators import (FilterOp, MLLMExtractOp, SinkOp,
+                                           SourceOp, WindowAggOp)
+    from repro.streaming.plan import Plan
+
+    # a short tumbling window so both segments close windows — the
+    # sharpest state to round-trip
+    win = Plan([SourceOp(stream_name="tollbooth"),
+                MLLMExtractOp(tasks=("present", "color"), model="big"),
+                FilterOp(("eq", "present", 1)),
+                WindowAggOp("top_color", 32), SinkOp()], query="Qwin")
+    return [
+        Feed("tb", TollBoothStream(seed=17),
+             [win, get_query("Q2").naive_plan()]),
+        Feed("vb", VolleyballStream(seed=17),
+             [get_query("Q12").naive_plan()]),
+    ]
+
+
+@pytest.mark.parametrize("gated", [False, True])
+def test_multistream_snapshot_restore_bitwise(ctx, gated):
+    from repro.scheduler import MultiStreamRuntime, SharedExtractServer
+
+    def runtime():
+        kw = {}
+        if gated:
+            # pipelined=False keeps gated classification deterministic
+            # (assemble order is data- not timing-dependent)
+            kw = {"server": SharedExtractServer(
+                ctx, gate=SemanticGate(GateConfig(threshold=0.06,
+                                                  revalidate_every=4))),
+                "pipelined": False}
+        return MultiStreamRuntime(_ms_snapshot_feeds(), ctx,
+                                  micro_batch=16, **kw)
+
+    full = None if gated else runtime().run(96)
+
+    seg = runtime()
+    seg.run(48)                                   # segment 1 (fresh)
+    snap = seg.snapshot()
+    assert snap["feeds"]["tb"]["source_index"] == 48
+    if gated:
+        assert snap.get("gate") is not None
+    cont = seg.run(48, warmup=0)                  # uninterrupted tail
+
+    rt2 = runtime()
+    rt2.restore(snap)
+    for fs in rt2._feeds:                         # replay to the offset
+        fs.feed.stream.batch(48)
+    resumed = rt2.run(48)                         # warmup suppressed
+
+    for feed in ("tb", "vb"):
+        for qid, cq in cont.feeds[feed].per_query.items():
+            rq = resumed.feeds[feed].per_query[qid]
+            # the round trip: restored == uninterrupted continuation,
+            # bitwise (outputs, windows, gating decisions and all)
+            assert rq.outputs == cq.outputs
+            assert rq.window_results == cq.window_results
+            if gated:
+                # segment boundaries change *when* revalidations
+                # assemble (a run-end drain is an extra barrier), so a
+                # gated segmented run is bitwise vs its own
+                # continuation, not vs a differently-segmented run
+                continue
+            # ungated, segmentation is invisible: the continuation is
+            # exactly the uninterrupted 96-frame run's tail
+            fq = full.feeds[feed].per_query[qid]
+            k = len(rq.window_results)
+            if k:
+                assert rq.window_results == fq.window_results[-k:]
+            assert [o for o in rq.outputs if "window" not in o] == \
+                [o for o in fq.outputs
+                 if "window" not in o and o["idx"] >= 48]
