@@ -2,8 +2,10 @@
 
 Prints ``name,us_per_call_or_metric,derived`` CSV rows; with ``--json DIR``
 each section additionally writes machine-readable rows to
-``DIR/BENCH_<section>.json`` (name, metric, derived, timestamp) so the perf
-trajectory across PRs can be diffed without scraping stdout.
+``DIR/BENCH_<section>.json`` (name, metric, derived, timestamp, plus host
+provenance: cpu count, platform, python and jax backend/devices) so the
+perf trajectory across PRs can be diffed without scraping stdout — and
+attributed to the machine that produced it.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-samsara]
                                           [--sections LIST]
@@ -18,12 +20,34 @@ cache) and uploads the ``BENCH_*.json`` files as workflow artifacts.
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
+import platform
 import sys
 import time
 import traceback
 from typing import List
+
+
+@functools.lru_cache(maxsize=1)
+def _host_info() -> dict:
+    """Host provenance stamped on every --json row: perf numbers are
+    meaningless in a cross-PR diff without knowing what ran them."""
+    info = {
+        "host_cpus": os.cpu_count(),
+        "host_platform": platform.platform(),
+        "host_python": platform.python_version(),
+    }
+    try:
+        import jax
+
+        info["jax_backend"] = jax.default_backend()
+        info["jax_devices"] = [str(d) for d in jax.devices()]
+        info["jax_version"] = jax.__version__
+    except Exception:  # noqa: BLE001 — no-jax hosts still get CPU info
+        pass
+    return info
 
 
 def _structured(row: str) -> dict:
@@ -53,6 +77,7 @@ def _structured(row: str) -> dict:
         "metric": metric,
         "derived": ",".join(rest),
         "timestamp": time.time(),
+        **_host_info(),
     }
 
 

@@ -271,6 +271,9 @@ def fig_multistream(ctx, cache, frames: int = MS_FRAMES) -> List[str]:
     so the jitted model runs strictly fewer times than the sum over
     independent per-query runs — with every query's outputs bitwise
     identical to its independent execution."""
+    import dataclasses as _dc
+
+    from repro.obs import NULL_TRACER, Observability
     from repro.scheduler import MultiStreamRuntime, SharingTreePlanner
 
     # no commas inside elements: the cache round-trips keys via ","-join
@@ -291,12 +294,20 @@ def fig_multistream(ctx, cache, frames: int = MS_FRAMES) -> List[str]:
         group_sizes = sorted((g.n_queries for g in demo.groups()),
                              reverse=True)
 
-        ms = MultiStreamRuntime(_ms_feeds(), ctx, micro_batch=16)
+        # metrics-only observability (NullTracer: no span recording, just
+        # the latency/staleness histograms) — outputs stay bitwise
+        # identical, so the exact-match check below still covers it
+        obs = Observability(tracer=NULL_TRACER)
+        ms = MultiStreamRuntime(_ms_feeds(), _dc.replace(ctx, obs=obs),
+                                micro_batch=16)
         exec_groups = {
             name: sorted((g.n_queries for g in ms.forests[name].groups()),
                          reverse=True)
             for name, _, _, _ in MS_FEEDS}
         shared = ms.run(frames)
+        lat = obs.slo.combined()
+        lat_feeds = {r["feed"]: [r["p50_ms"], r["p95_ms"], r["p99_ms"]]
+                     for r in obs.slo.rows()}
 
         indep_forwards = 0
         indep_wall = 0.0
@@ -325,6 +336,8 @@ def fig_multistream(ctx, cache, frames: int = MS_FRAMES) -> List[str]:
             "planner_streams": len(demo.streams),
             "planner_groups": group_sizes,
             "exec_groups": exec_groups,
+            "lat_p50_ms": lat["p50_ms"], "lat_p95_ms": lat["p95_ms"],
+            "lat_p99_ms": lat["p99_ms"], "lat_feeds": lat_feeds,
         }
         cache[key] = out
     rows = [
@@ -343,6 +356,11 @@ def fig_multistream(ctx, cache, frames: int = MS_FRAMES) -> List[str]:
         "exec_groups=" + "|".join(
             f"{name}:{'+'.join(str(s) for s in sizes)}"
             for name, sizes in out["exec_groups"].items()),
+        f"fig_ms,latency_p95_ms,{out['lat_p95_ms']:.1f},"
+        f"p50={out['lat_p50_ms']:.1f};p99={out['lat_p99_ms']:.1f};"
+        "per_feed=" + "|".join(
+            f"{name}:{p50:.0f}/{p95:.0f}/{p99:.0f}"
+            for name, (p50, p95, p99) in out["lat_feeds"].items()),
     ]
     return rows
 
@@ -373,6 +391,7 @@ def fig_pipeline(ctx, cache, frames: int = MS_FRAMES) -> List[str]:
     (sync, pipe, sync, pipe) with the best trial per mode kept — a
     mid-measure jit compile or a monotonic CPU-share throttle would
     otherwise swamp the effect being measured."""
+    from repro.obs import NULL_TRACER, Observability
     from repro.scheduler import MultiStreamRuntime, SharedExtractServer
 
     key = ("PIPE-4feeds", ("pipeline-v3", str(frames)) + tuple(
@@ -380,7 +399,11 @@ def fig_pipeline(ctx, cache, frames: int = MS_FRAMES) -> List[str]:
     if key in cache:
         out = cache[key]
     else:
-        server = SharedExtractServer(ctx)
+        # metrics-only observability rides the shared server; the
+        # registry resets before each pipelined trial so the reported
+        # latency columns describe pipelined serving, not a sync/pipe mix
+        obs = Observability(tracer=NULL_TRACER)
+        server = SharedExtractServer(ctx, obs=obs)
         warm = min(frames, 48)
         sync_ms = MultiStreamRuntime(_ms_feeds(), ctx, micro_batch=16,
                                      pipelined=False, server=server)
@@ -390,9 +413,13 @@ def fig_pipeline(ctx, cache, frames: int = MS_FRAMES) -> List[str]:
         pipe_ms.run(warm)
         sync = pipe = None
         for _ in range(2):
-            s, p = sync_ms.run(frames), pipe_ms.run(frames)
+            s = sync_ms.run(frames)
+            obs.metrics.reset()
+            p = pipe_ms.run(frames)
             sync = s if sync is None or s.fps > sync.fps else sync
             pipe = p if pipe is None or p.fps > pipe.fps else pipe
+        lat = obs.slo.combined()           # the final pipelined trial
+        stale = {r["feed"]: r["stale_p99_ms"] for r in obs.slo.rows()}
 
         exact = True
         for name, ds, seed, qids in MS_FEEDS:
@@ -409,6 +436,8 @@ def fig_pipeline(ctx, cache, frames: int = MS_FRAMES) -> List[str]:
             "stats": dict(pipe.server_stats),
             "sync_forwards": sync.server_stats["forwards"],
             "exact": exact,
+            "lat_p50_ms": lat["p50_ms"], "lat_p95_ms": lat["p95_ms"],
+            "lat_p99_ms": lat["p99_ms"], "stale_p99_ms": stale,
         }
         cache[key] = out
     st = out["stats"]
@@ -424,6 +453,10 @@ def fig_pipeline(ctx, cache, frames: int = MS_FRAMES) -> List[str]:
         f"staging_skipped={st['staging_skipped']}",
         f"fig_pipeline,exact,{out['exact']},per-query outputs bitwise "
         "identical to independent execution",
+        f"fig_pipeline,latency_p95_ms,{out['lat_p95_ms']:.1f},"
+        f"p50={out['lat_p50_ms']:.1f};p99={out['lat_p99_ms']:.1f};"
+        "stale_p99=" + "|".join(
+            f"{name}:{v:.0f}" for name, v in out["stale_p99_ms"].items()),
     ]
     return rows
 
@@ -682,9 +715,11 @@ CACHE_PATH = os.path.join(REPORT_DIR, "samsara_bench.json")
 #: bump when runtime semantics change measured results (v2: end-of-stream
 #: partial-window flush; v3: per-frame extract normalization shared with
 #: the SharedExtractServer; v4: pipelined dispatch-ahead serving is the
-#: multi-stream default and CheapColor/Detect normalize per frame) — a
-#: stale cache would silently mix semantics
-CACHE_VERSION = 4
+#: multi-stream default and CheapColor/Detect normalize per frame;
+#: v5: fig_ms/fig_pipeline rows gain latency-percentile columns whose
+#: fields a v4 cache entry lacks) — a stale cache would silently mix
+#: semantics
+CACHE_VERSION = 5
 
 
 def _load_cache() -> Dict:

@@ -1,0 +1,151 @@
+"""Frame-lifecycle observability on the 4-feed / 9-query serving stack.
+
+Runs the multi-stream workload (three tollbooth cameras + a volleyball
+court, semantic gating in front of the shared extract server) twice:
+
+  1. **observed** — an ``Observability`` handle threaded through
+     ``OpContext.obs``: every frame's lifecycle is traced (ingest →
+     prefix ops → gate consult → server queue-wait → staging → dispatch →
+     device forward → resume → tail), per-feed latency/staleness land in
+     log-binned histograms, and the span ring buffer exports to
+     ``reports/trace.json`` — Chrome trace-event JSON.  Open it at
+     https://ui.perfetto.dev (or chrome://tracing): one track per feed,
+     plus shared ``server`` / ``device`` tracks and the
+     ``inflight`` / ``queue_depth`` occupancy counters.
+  2. **unobserved** — the default ``NULL_OBS``: instrumented call sites
+     degrade to no-op method calls.  The example asserts both runs'
+     per-query outputs are bitwise identical, and bounds the tracing
+     overhead (measured no-op + span cost × call count vs measured wall)
+     at ≤ 1%.
+
+What the trace shows on this CPU-only container: the ``device`` track's
+``forward[...]`` spans tile the timeline nearly end-to-end while the
+per-feed host spans squeeze between them — XLA's "device" work saturates
+the same cores the host loop needs, which is why the pipelined speedup
+measured by ``benchmarks/samsara_bench.py fig_pipeline`` sits near 1×
+here (overlap is contention-bound); on a real accelerator the forward
+spans move off-host and the same trace shows the overlap opening up.
+
+  PYTHONPATH=src python examples/observe_serve.py [--frames 128] [--quick]
+"""
+import argparse
+import os
+import time
+
+from repro.data import TollBoothStream, VolleyballStream
+from repro.obs import PHASES, Observability
+from repro.queries import get_query
+from repro.scheduler import Feed, MultiStreamRuntime, SharedExtractServer
+from repro.semantic import GateConfig, SemanticGate
+from repro.streaming.pretrain import stream_models
+
+FEEDS = (
+    ("tb-north", "tollbooth", 1234, ("Q2", "Q6", "Q8")),
+    ("tb-south", "tollbooth", 4321, ("Q1", "Q5")),
+    ("tb-east", "tollbooth", 2025, ("Q3", "Q9")),
+    ("court-1", "volleyball", 1234, ("Q12", "Q13")),
+)
+TRACE_PATH = os.path.join("reports", "trace.json")
+
+
+def _make_stream(dataset: str, seed: int):
+    if dataset == "tollbooth":
+        return TollBoothStream(seed=seed)
+    return VolleyballStream(seed=seed)
+
+
+def _run(ctx, frames: int, obs=None):
+    """One gated, pipelined serving run over fresh streams/runtimes."""
+    import dataclasses
+
+    if obs is not None:
+        ctx = dataclasses.replace(ctx, obs=obs)
+    feeds = [Feed(name, _make_stream(ds, seed),
+                  [get_query(qid).naive_plan() for qid in qids])
+             for name, ds, seed, qids in FEEDS]
+    gate = SemanticGate(GateConfig(threshold=0.06))
+    ms = MultiStreamRuntime(feeds, ctx, micro_batch=16, gate=gate)
+    return ms.run(frames)
+
+
+def _overhead_bound(wall_s: float, frames: int) -> float:
+    """Upper-bound the disabled-path tracing cost as a fraction of the
+    measured wall: (measured ns per no-op obs call) × (instrumented call
+    sites per micro-batch × micro-batches).  The disabled path executes
+    only ``obs.enabled`` attribute checks and ``NULL_OBS.now()`` — this
+    measures those directly instead of trusting an assumed constant."""
+    from repro.obs import NULL_OBS
+
+    reps = 200_000
+    t0 = time.perf_counter_ns()
+    for _ in range(reps):
+        NULL_OBS.now()
+    per_call_ns = (time.perf_counter_ns() - t0) / reps
+    # ~24 guarded sites touched per micro-batch across the whole
+    # lifecycle (ingest, per-prefix-op, gate, submit, launch, retire,
+    # resume, tail, SLO) — a deliberate overestimate
+    calls = 24 * (frames * len(FEEDS) / 16 + 1)
+    return (per_call_ns * calls) / (wall_s * 1e9)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=128,
+                    help="frames per feed")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny models + short streams: smoke-run in seconds")
+    args = ap.parse_args()
+
+    if args.quick:
+        args.frames = min(args.frames, 48)
+    ctx = stream_models(quick=args.quick)
+
+    print(f"\n=== observed serving: {len(FEEDS)} feeds × "
+          f"{args.frames} frames (gated, pipelined) ===")
+    obs = Observability(slo_target_ms=250.0)
+    observed = _run(ctx, args.frames, obs=obs)
+
+    print("\nper-feed SLO accounting "
+          f"(target {obs.slo.target_ms:.0f}ms frame latency):")
+    print(obs.slo.table())
+
+    st = observed.server_stats
+    print(f"\nserver: forwards={st['forwards']} "
+          f"coalesced={st['coalesced_batches']} "
+          f"peak_inflight={st['max_inflight_seen']} "
+          f"cache_hits={st['cache_hits']} "
+          f"revalidations={st['revalidations']}")
+    qw = obs.metrics.histogram("forward_ms")
+    print(f"device forwards: n={qw.count} p50={qw.percentile(50):.1f}ms "
+          f"p95={qw.percentile(95):.1f}ms")
+
+    os.makedirs("reports", exist_ok=True)
+    n_events = obs.tracer.export_chrome(TRACE_PATH)
+    cats = {e["cat"] for e in obs.tracer.events()}
+    print(f"\nwrote {TRACE_PATH}: {n_events} events, "
+          f"span phases = {sorted(cats & set(PHASES))}")
+    print("open it at https://ui.perfetto.dev — one track per feed plus "
+          "shared server/device tracks and inflight/queue_depth counters")
+    assert len(cats & set(PHASES)) >= 6, \
+        f"expected >= 6 lifecycle phases in the trace, got {sorted(cats)}"
+
+    print(f"\n=== unobserved rerun (NULL_OBS) — the no-overhead "
+          f"contract ===")
+    baseline = _run(ctx, args.frames)
+    same = all(
+        observed.feeds[name].per_query[qid].outputs
+        == baseline.feeds[name].per_query[qid].outputs
+        and observed.feeds[name].per_query[qid].window_results
+        == baseline.feeds[name].per_query[qid].window_results
+        for name, _, _, qids in FEEDS for qid in qids)
+    bound = _overhead_bound(baseline.wall_s, args.frames)
+    print(f"outputs bitwise identical observed vs unobserved: "
+          f"{'yes' if same else 'NO'}")
+    print(f"disabled-path overhead bound: {bound:.3%} of wall "
+          f"(limit 1%)")
+    assert same, "observability changed serving outputs"
+    assert bound <= 0.01, f"disabled-path overhead bound {bound:.3%} > 1%"
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@
 #   scripts/smoke.sh tests        # tests only
 #   scripts/smoke.sh examples     # examples only
 #   scripts/smoke.sh bench        # quick serving benchmarks only
+#   scripts/smoke.sh obs          # observability walkthrough + trace check
 #
 # Matches the CI workflow (.github/workflows/ci.yml); keep the two in sync.
 set -euo pipefail
@@ -27,6 +28,26 @@ if [[ "$what" == "all" || "$what" == "examples" ]]; then
         echo "=== $ex --quick ==="
         python "$ex" --quick
     done
+fi
+
+if [[ "$what" == "all" || "$what" == "obs" ]]; then
+    # the examples loop above already ran the walkthrough in "all" mode;
+    # standalone "obs" runs it itself, then both validate the exported
+    # trace (Chrome trace-event JSON, >= 6 lifecycle span phases)
+    if [[ "$what" == "obs" ]]; then
+        echo "=== examples/observe_serve.py --quick ==="
+        python examples/observe_serve.py --quick
+    fi
+    echo "=== reports/trace.json sanity ==="
+    python - <<'EOF'
+import json
+from repro.obs import PHASES
+evs = json.load(open("reports/trace.json"))["traceEvents"]
+cats = {e["cat"] for e in evs if e.get("ph") == "X"}
+phases = sorted(cats & set(PHASES))
+assert len(phases) >= 6, f"trace has too few lifecycle phases: {phases}"
+print(f"trace.json OK: {len(evs)} events, phases={phases}")
+EOF
 fi
 
 if [[ "$what" == "all" || "$what" == "bench" ]]; then

@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.costs import CostCatalog
+from repro.obs import resolve_obs
 from repro.core.logical import LogicalOptimizer
 from repro.core.phases import OptimizationPhase, PhaseContext
 from repro.core.physical import PhysicalOptimizer
@@ -116,18 +117,38 @@ class SuperOptimizer:
         phase_wall_s: Dict[str, float] = {}
         naive_desc = plan.describe()
 
+        obs = resolve_obs(getattr(self.ctx, "obs", None))
+
         for name in phases:
             phase = self.phase_registry[name]
             t0 = time.perf_counter()
+            t0_ns = obs.now() if obs.enabled else 0
             plan, rep = phase.run(plan, pctx)
             phase_wall_s[name] = time.perf_counter() - t0
+            if obs.enabled:
+                obs.tracer.span(f"opt:{name}", "optimize", t0_ns,
+                                obs.now(), track="superopt")
             report_phases.append(rep)
 
         op_timings: List[Dict[str, Any]] = []
         if calibrate:
             t0 = time.perf_counter()
+            t0_ns = obs.now() if obs.enabled else 0
             op_timings = self.calibrate(plan, pctx)
             phase_wall_s["calibration"] = time.perf_counter() - t0
+            if obs.enabled:
+                obs.tracer.span("opt:calibration", "optimize", t0_ns,
+                                obs.now(), track="superopt")
+
+        if obs.enabled:
+            # the report's phase walls + calibrated op timings land in the
+            # registry next to the serving metrics (one accounting surface)
+            m = obs.metrics
+            for ph, w in phase_wall_s.items():
+                m.set_gauge(f"superopt/{query.qid}/{ph}_wall_s", w)
+            for row in op_timings:
+                m.set_gauge(
+                    f"superopt/{query.qid}/op_us/{row['op']}", row["us"])
 
         report = OptimizationReport(
             query=query.qid, naive_plan=naive_desc,

@@ -165,10 +165,10 @@ def run_cell(arch: str, cell_name: str, multi_pod: bool = False,
         "arch": arch, "cell": cell_name, "mesh": mesh_name,
         "chips": chips(mesh), "status": "ok",
     }
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         compiled, spec = _compile_cell(cfg, cell_name, mesh, unroll=False)
-        t_full = time.time() - t0
+        t_full = time.perf_counter() - t0
         mem = compiled.memory_analysis()
         full = _analyze(compiled)
 
@@ -244,7 +244,7 @@ def run_cell(arch: str, cell_name: str, multi_pod: bool = False,
             print(f"[OK] {arch:24s} {cell_name:12s} {mesh_name:10s} "
                   f"args/dev={arg_gb:7.2f}GiB temp/dev={tmp_gb:7.2f}GiB "
                   f"flops/part={fl:.3e} coll/part={cl/2**30:.3f}GiB "
-                  f"compile={t_full:.0f}s total={time.time()-t0:.0f}s",
+                  f"compile={t_full:.0f}s total={time.perf_counter()-t0:.0f}s",
                   flush=True)
     except Exception as e:  # noqa: BLE001 - report and continue
         result["status"] = "error"

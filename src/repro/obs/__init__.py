@@ -1,0 +1,101 @@
+"""Observability: frame-lifecycle tracing, metrics, SLO accounting.
+
+``Observability`` bundles the three surfaces the serving stack reports
+into — a ``Tracer`` (ring-buffer span recording, Perfetto-exportable), a
+``Metrics`` registry (counters / gauges / log-binned histograms with
+p50/p95/p99 extraction) and an ``SLOTracker`` (per-feed frame latency,
+staleness, violation budget) — behind one object threaded through
+``OpContext.obs``.
+
+The default everywhere is ``NULL_OBS``: ``enabled`` is False, the tracer
+is the no-op ``NullTracer``, and every instrumented call site guards its
+clock reads with ``if obs.enabled:`` — so un-observed serving pays only
+empty attribute checks and stays bitwise identical to pre-instrumentation
+behavior (enforced by ``tests/test_obs.py``).
+
+Usage::
+
+    obs = Observability()                       # tracing + metrics + SLO
+    ctx = dataclasses.replace(ctx, obs=obs)
+    MultiStreamRuntime(feeds, ctx).run(256)
+    print(obs.slo.table())                      # per-feed p50/p95/p99
+    obs.tracer.export_chrome("reports/trace.json")   # open in Perfetto
+
+    obs = Observability(tracer=NULL_TRACER)     # metrics/SLO, no tracing
+
+The canonical span phases a served frame's lifecycle passes through (the
+``cat`` field of every span, one Perfetto track per feed plus a shared
+``server``/``device`` pair):
+
+    ingest -> prefix -> gate -> queue -> staging -> dispatch
+           -> forward -> resume -> tail
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.obs.metrics import Counter, Gauge, Histogram, Metrics
+from repro.obs.slo import SLOTracker
+from repro.obs.tracer import NULL_TRACER, NullTracer, Tracer
+
+#: the span categories instrumented across the serving stack, in
+#: lifecycle order (export sanity checks assert against this list)
+PHASES = ("ingest", "prefix", "gate", "queue", "staging", "dispatch",
+          "forward", "resume", "tail")
+
+
+class Observability:
+    """Tracer + metrics + SLO tracker, one handle (see module docs)."""
+
+    enabled = True
+
+    def __init__(self, tracer: Optional[NullTracer] = None,
+                 metrics: Optional[Metrics] = None,
+                 capacity: int = 65536, slo_target_ms: float = 100.0):
+        self.tracer = tracer if tracer is not None \
+            else Tracer(capacity=capacity)
+        self.metrics = metrics if metrics is not None else Metrics()
+        self.slo = SLOTracker(self.metrics, target_ms=slo_target_ms)
+
+    def now(self) -> int:
+        """Monotonic ns stamp for lifecycle accounting (real even when
+        the tracer is a ``NullTracer`` — latency histograms don't require
+        span recording)."""
+        return time.perf_counter_ns()
+
+
+class _NullObservability(Observability):
+    """The inert default: ``enabled`` False, no clock reads, no state.
+
+    One process-wide instance (``NULL_OBS``) backs every un-observed
+    context; its metrics registry exists (cold-path readers need not
+    null-check) but instrumented hot paths skip it entirely."""
+
+    enabled = False
+
+    def __init__(self) -> None:
+        super().__init__(tracer=NULL_TRACER)
+
+    def now(self) -> int:
+        return 0
+
+
+NULL_OBS = _NullObservability()
+
+
+def resolve_obs(*candidates) -> Observability:
+    """First non-None observability among ``candidates``, else NULL_OBS —
+    the one lookup rule every component uses (explicit arg outranks
+    context, context outranks the inert default)."""
+    for c in candidates:
+        if c is not None:
+            return c
+    return NULL_OBS
+
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Metrics", "NULL_OBS", "NULL_TRACER",
+    "NullTracer", "Observability", "PHASES", "SLOTracker", "Tracer",
+    "resolve_obs",
+]

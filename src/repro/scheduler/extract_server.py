@@ -63,7 +63,21 @@ jitted fn, no copy), the cache tier's ``cache_hits`` / ``cache_misses`` /
 ``revalidations`` / ``cache_mismatches``, plus the original ``frames`` /
 ``padded_frames`` / ``requests`` / ``coalesced_batches``.  ``stats`` is a
 *cached view*: one dict object for the server's lifetime, updated in
-place (never rebuilt per read).
+place (never rebuilt per read).  Two entries are *gauges*, not counters:
+``queue_depth`` (requests queued, undispatched) and ``inflight``
+(forwards launched, unretired) — the view recomputes them from live
+state on every read, so they stay truthful across ``reset_stats()``
+instead of freezing at whatever the last in-place update wrote.
+
+Observability (``repro.obs``): with an enabled ``Observability``
+(``obs=`` or ``ctx.obs``) the server records the device half of every
+frame's lifecycle — per-request ``queue_wait`` spans (submit → launch)
+and a ``queue_wait_ms/<feed>`` histogram, ``staging`` / ``dispatch``
+spans on the ``server`` track, a ``forward[variant]`` span per chunk on
+the ``device`` track (launch → observed completion) feeding a
+``forward_ms`` histogram, and ``inflight`` / ``queue_depth`` counter
+samples — the occupancy timeline that shows whether double buffering
+actually overlaps.  Un-observed servers pay only no-op calls.
 """
 from __future__ import annotations
 
@@ -74,6 +88,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import resolve_obs
 from repro.streaming.mllm import make_extract_fn, variant_models
 from repro.streaming.operators import OpContext, _bucket_pad
 
@@ -90,7 +105,8 @@ class _InFlightChunk:
     plus the bookkeeping to fulfil its requests and recycle its staging
     buffer once the device retires it."""
 
-    __slots__ = ("preds", "reqs", "buf_key", "buf", "completed", "_np")
+    __slots__ = ("preds", "reqs", "buf_key", "buf", "completed", "_np",
+                 "t_launch", "variant", "total")
 
     def __init__(self, preds, reqs: List["ExtractRequest"],
                  buf_key=None, buf=None):
@@ -100,6 +116,9 @@ class _InFlightChunk:
         self.buf = buf                    # staging buffer, held until retire
         self.completed = False
         self._np: Optional[Dict[str, np.ndarray]] = None
+        self.t_launch = 0                 # obs stamp: forward launch (ns)
+        self.variant = ""
+        self.total = 0
 
     def ready(self) -> bool:
         return all(_is_ready(v) for v in self.preds.values())
@@ -161,7 +180,8 @@ class ExtractRequest:
     observed complete by ``poll``/``wait``/``drain``) → ``result`` (lazy
     numpy materialization, shared per coalesced chunk, on first access)."""
 
-    __slots__ = ("variant", "frames", "feed", "_chunk", "_offset")
+    __slots__ = ("variant", "frames", "feed", "_chunk", "_offset",
+                 "t_submit")
 
     def __init__(self, variant: str, frames: np.ndarray, feed: str = ""):
         self.variant = variant            # big | small | pruned
@@ -169,6 +189,7 @@ class ExtractRequest:
         self.feed = feed
         self._chunk: Optional[_InFlightChunk] = None
         self._offset = 0
+        self.t_submit = 0                 # obs stamp: enqueue time (ns)
 
     @property
     def n(self) -> int:
@@ -254,7 +275,7 @@ class SharedExtractServer:
     MAX_PARTIAL_DEFERS = 2
 
     def __init__(self, ctx: OpContext, max_batch: int = 64,
-                 max_inflight: int = 2, gate=None):
+                 max_inflight: int = 2, gate=None, obs=None):
         assert max_batch >= 1 and max_inflight >= 1
         self.ctx = ctx
         self.max_batch = max_batch
@@ -263,6 +284,10 @@ class SharedExtractServer:
         #: stage in front of dispatch.  Defaults to the context's gate so
         #: one configuration point covers the solo and the served path.
         self.gate = gate if gate is not None else ctx.gate
+        #: observability handle (explicit arg > ctx.obs > inert NULL_OBS)
+        self.obs = resolve_obs(obs, getattr(ctx, "obs", None))
+        if self.gate is not None:
+            self.gate.obs = self.obs
         self._defers: Dict[Tuple, int] = {}   # bucket key -> deferred calls
         self._fns: Dict[str, Any] = {}
         self._queue: List[ExtractRequest] = []
@@ -285,6 +310,8 @@ class SharedExtractServer:
                 "dispatches": 0, "max_inflight_seen": 0,
                 "staging_allocated": 0, "staging_reused": 0,
                 "staging_skipped": 0,
+                # live gauges (recomputed on read, see ``stats``)
+                "queue_depth": 0, "inflight": 0,
                 # cache tier (mirrors the gate's counters; stays 0 ungated)
                 "cache_hits": 0, "cache_misses": 0,
                 "revalidations": 0, "cache_mismatches": 0}
@@ -295,19 +322,28 @@ class SharedExtractServer:
         the server's lifetime, updated in place (it used to be rebound on
         every reset, so holders diffed against a dead dict).  Reading the
         view syncs the semantic-cache tier's counters
-        (hits/misses/revalidations/mismatches) into it."""
+        (hits/misses/revalidations/mismatches) into it and recomputes the
+        ``queue_depth`` / ``inflight`` gauges from live state — they stay
+        truthful across ``reset_stats()``."""
         if self.gate is not None:
             self._stats.update(self.gate.counters)
+        self._stats["queue_depth"] = self._pending_reqs_total
+        self._stats["inflight"] = len(self._inflight)
         return self._stats
 
     def reset_stats(self) -> None:
         """Drop accounting (e.g. after warmup) without dropping the
         compiled program cache, the staging pool or the semantic cache's
         keyframes — reusing those across the measured run is the whole
-        point of warmup."""
+        point of warmup.  Warmup-polluted latency histograms (queue-wait,
+        forward: compile time would swamp the measured p99) drop with it;
+        gauges recompute on the next ``stats`` read."""
         self._stats.update(self._fresh_stats())
         if self.gate is not None:
             self.gate.reset_counters()
+        if self.obs.enabled:
+            self.obs.metrics.drop("queue_wait_ms")
+            self.obs.metrics.drop("forward_ms")
 
     # ------------------------------------------------------------------
     def _fn(self, variant: str):
@@ -348,6 +384,8 @@ class SharedExtractServer:
     def _enqueue(self, variant: str, frames: np.ndarray,
                  feed: str) -> ExtractRequest:
         req = ExtractRequest(variant=variant, frames=frames, feed=feed)
+        if self.obs.enabled:
+            req.t_submit = self.obs.now()
         self._queue.append(req)
         self._pending_reqs[feed] = self._pending_reqs.get(feed, 0) + 1
         self._pending_frames[feed] = \
@@ -385,6 +423,8 @@ class SharedExtractServer:
 
     def _launch(self, variant: str, chunk: List[ExtractRequest]) -> None:
         """Pack one chunk and launch its forward asynchronously."""
+        obs = self.obs
+        t_stage = obs.now() if obs.enabled else 0
         total = sum(r.n for r in chunk)
         bucket = _bucket_pad(total)
         shape = chunk[0].frames.shape[1:]
@@ -406,8 +446,25 @@ class SharedExtractServer:
                 # program — a reused buffer otherwise carries stale frames
                 buf[total:bucket] = 0
             dev = jnp.asarray(buf)
+        t_disp = obs.now() if obs.enabled else 0
         preds = self._fn(variant)(dev)     # async dispatch: returns now
         fl = _InFlightChunk(preds, list(chunk), buf_key, buf)
+        if obs.enabled:
+            fl.t_launch = obs.now()
+            fl.variant = variant
+            fl.total = total
+            tr = obs.tracer
+            tr.span("staging", "staging", t_stage, t_disp,
+                    track="server", n=total)
+            tr.span(f"dispatch[{variant}]", "dispatch", t_disp,
+                    fl.t_launch, track="server", n=bucket)
+            for r in chunk:
+                if r.t_submit:
+                    tr.span("queue_wait", "queue", r.t_submit, fl.t_launch,
+                            track=f"feed:{r.feed}", n=r.n)
+                    obs.metrics.observe(
+                        f"queue_wait_ms/{r.feed}",
+                        (fl.t_launch - r.t_submit) / 1e6, r.n)
         off = 0
         for r in chunk:
             r._chunk = fl
@@ -418,6 +475,10 @@ class SharedExtractServer:
         self._pending_reqs_total -= len(chunk)
         self._pending_frames_total -= total
         self._inflight.append(fl)
+        if obs.enabled:
+            # occupancy timeline: sampled at every launch and retire
+            obs.tracer.counter("inflight", len(self._inflight))
+            obs.tracer.counter("queue_depth", self._pending_reqs_total)
         self.stats["forwards"] += 1
         self.stats["frames"] += total
         self.stats["padded_frames"] += bucket - total
@@ -529,6 +590,18 @@ class SharedExtractServer:
             # the device consumed the staging input; recycle it
             self._staging.setdefault(fl.buf_key, []).append(fl.buf)
             fl.buf = None
+        if fl.t_launch:
+            # launch → observed completion: an upper bound on device time
+            # (includes the poll interval), which is the honest quantity
+            # for occupancy reasoning — the host couldn't have used the
+            # result any earlier
+            obs = self.obs
+            t1 = obs.now()
+            obs.tracer.span(f"forward[{fl.variant}]", "forward",
+                            fl.t_launch, t1, track="device", n=fl.total)
+            obs.metrics.observe(
+                "forward_ms", (t1 - fl.t_launch) / 1e6)
+            fl.t_launch = 0
 
     def poll(self) -> int:
         """Non-blocking: retire every in-flight forward whose device work

@@ -116,11 +116,21 @@ class _GroupExec:
 
     def __init__(self, execution, ctx: OpContext,
                  server: SharedExtractServer, feed: str,
-                 parallel_tails: bool, open_ops: bool = True):
+                 parallel_tails: bool, open_ops: bool = True,
+                 arrival: Optional[list] = None):
         self.exe = execution
         self.server = server
         self.feed = feed
         self.parallel_tails = parallel_tails
+        #: observability rides the server — one handle for every group
+        #: coalescing into it, so spans from all feeds land in one trace
+        self.obs = server.obs
+        self._track = f"feed:{feed}"
+        #: shared one-slot newest-arrival stamp (ns): the pull loop writes
+        #: it at ingest, ``_fan_out`` reads it at emit — their difference
+        #: is the feed's staleness (how far the freshest served answer
+        #: lags the stream head)
+        self.arrival = arrival if arrival is not None else [0]
         if open_ops:
             for op in self.all_ops():
                 op.open(ctx)
@@ -158,10 +168,18 @@ class _GroupExec:
 
     def resume(self, p: _Pending) -> Optional[_Pending]:
         op = self.exe.prefix[p.op_index]
-        batch = op.apply_preds(p.batch, p.req.result, p.n)
+        obs = self.obs
+        if obs.enabled:
+            t0 = obs.now()
+            batch = op.apply_preds(p.batch, p.req.result, p.n)
+            obs.tracer.span("resume", "resume", t0, obs.now(),
+                            track=self._track, n=p.n)
+        else:
+            batch = op.apply_preds(p.batch, p.req.result, p.n)
         return self._advance(batch, p.op_index + 1)
 
     def _advance(self, batch: Batch, i: int) -> Optional[_Pending]:
+        obs = self.obs
         while i < len(self.exe.prefix):
             op = self.exe.prefix[i]
             self.pcounts[op.name] += len(batch["idx"])
@@ -171,14 +189,38 @@ class _GroupExec:
                 req = self.server.submit(variant, batch["frames"],
                                          feed=self.feed)
                 return _Pending(op_index=i, batch=batch, req=req, n=n)
-            batch = broadcast_windows(op.process(batch), self.windows)
+            if obs.enabled:
+                t0 = obs.now()
+                batch = broadcast_windows(op.process(batch), self.windows)
+                obs.tracer.span(f"prefix:{op.name}", "prefix", t0,
+                                obs.now(), track=self._track, n=n)
+            else:
+                batch = broadcast_windows(op.process(batch), self.windows)
             i += 1
         self._fan_out(batch)
         return None
 
     def _fan_out(self, batch: Batch) -> None:
+        obs = self.obs
+        if not obs.enabled:
+            fan_out_tails(self.exe.tails, batch, self.counts, self.windows,
+                          parallel=self.parallel_tails)
+            return
+        t0 = obs.now()
         fan_out_tails(self.exe.tails, batch, self.counts, self.windows,
                       parallel=self.parallel_tails)
+        t1 = obs.now()
+        obs.tracer.span("tail", "tail", t0, t1, track=self._track,
+                        n=len(batch["idx"]))
+        tb = batch.get("_obs_t0")
+        if tb:
+            # frame latency: ingest stamp → emit; staleness: emit − the
+            # feed's newest arrival (exceeds latency whenever fresher
+            # frames arrived while this batch was in flight)
+            stale = (t1 - self.arrival[0]) / 1e6 if self.arrival[0] \
+                else None
+            obs.slo.record(self.feed, (t1 - tb) / 1e6, stale,
+                           n=int(batch.get("_obs_n", len(batch["idx"]))))
 
     def flush(self) -> None:
         """End of stream.  Flush batches carry no frames (only buffered
@@ -189,12 +231,14 @@ class _GroupExec:
 
 
 class _FeedState:
-    def __init__(self, feed: Feed, groups: List[_GroupExec]):
+    def __init__(self, feed: Feed, groups: List[_GroupExec],
+                 arrival: Optional[list] = None):
         self.feed = feed
         self.groups = groups
         self.source_index = 0
         self.labels: List[Dict[str, Any]] = []
         self.pendings: List[tuple] = []      # (group, _Pending) FIFO
+        self.arrival = arrival if arrival is not None else [0]
 
     @property
     def name(self) -> str:
@@ -226,6 +270,9 @@ class MultiStreamRuntime:
         self.server = server if server is not None \
             else SharedExtractServer(self.ctx, max_inflight=max_inflight,
                                      gate=gate)
+        #: observability rides the server (one trace across every feed);
+        #: attach via ``ctx.obs`` or the server's ``obs=``
+        self.obs = self.server.obs
         self._restored = False
         self.planner = planner if planner is not None else SharingTreePlanner()
         self.max_pending = max_pending
@@ -242,10 +289,12 @@ class MultiStreamRuntime:
                 f"feed {feed.name!r} mixes source streams {streams}"
             forest = self.planner.plan(feed.plans)
             self.forests[feed.name] = forest
+            arrival = [0]                 # shared newest-arrival slot
             groups = [_GroupExec(g.execution, self.ctx, self.server,
-                                 feed.name, parallel_tails)
+                                 feed.name, parallel_tails,
+                                 arrival=arrival)
                       for g in forest.groups()]
-            self._feeds.append(_FeedState(feed, groups))
+            self._feeds.append(_FeedState(feed, groups, arrival=arrival))
 
     @classmethod
     def from_fleet(cls, fleet, streams: Dict[str, Any], ctx: OpContext,
@@ -397,11 +446,23 @@ class MultiStreamRuntime:
                 if len(fs.pendings) >= self.max_pending * len(fs.groups):
                     continue                      # per-stream backpressure
                 take = min(self.micro_batch, remaining[fs.name])
+                obs = self.obs
+                t_pull = obs.now() if obs.enabled else 0
                 frames, labels = fs.feed.stream.batch(take)
                 fs.labels.extend(labels)
                 batch = {"frames": frames,
                          "idx": np.arange(fs.source_index,
                                           fs.source_index + take)}
+                if obs.enabled:
+                    # lifecycle stamps ride the batch dict (every op
+                    # copies it, so they survive to fan-out); the shared
+                    # arrival slot feeds the staleness measure
+                    t_arr = obs.now()
+                    obs.tracer.span("ingest", "ingest", t_pull, t_arr,
+                                    track=f"feed:{fs.name}", n=take)
+                    batch["_obs_t0"] = t_arr
+                    batch["_obs_n"] = take
+                    fs.arrival[0] = t_arr
                 fs.source_index += take
                 remaining[fs.name] -= take
                 for g in fs.groups:
@@ -494,6 +555,15 @@ class MultiStreamRuntime:
                 if gate.served(fs.name):
                     self.planner.catalog.record_gate_hit_rate(
                         fs.name, gate.hit_rate(fs.name))
+        if self.obs.enabled:
+            # unify the ad-hoc surfaces: server stats + gate counters land
+            # in the registry next to the latency/staleness histograms
+            m = self.obs.metrics
+            m.ingest("server", self.server.stats)
+            m.set_gauge("run/wall_s", wall)
+            m.set_gauge("run/fps", total_qframes / wall)
+            for name, fr in feeds.items():
+                m.counter(f"mllm_frames/{name}").set(fr.mllm_frames)
         return MultiStreamResult(
             fps=total_qframes / wall,
             wall_s=wall,

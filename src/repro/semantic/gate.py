@@ -22,6 +22,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.obs import NULL_OBS
 from repro.semantic.admission import AdmissionController
 from repro.semantic.cache import Admission, CacheEntry, SemanticExtractCache
 from repro.semantic.signature import TemporalSignature
@@ -77,6 +78,10 @@ class SemanticGate:
         self.controller = AdmissionController(self.config.threshold,
                                               self.config.accuracy_budget)
         self.counters: Dict[str, int] = {k: 0 for k in self.COUNTER_KEYS}
+        #: observability handle; owners (server / solo op) overwrite it
+        #: with the context's — the gate then emits per-consult ``gate``
+        #: spans and hit/miss/revalidate instants on the feed's track
+        self.obs = NULL_OBS
         #: per-feed view of the same counters — the measured hit rates the
         #: cost model prices gated plans by
         self.feed_counters: Dict[str, Dict[str, int]] = {}
@@ -120,6 +125,8 @@ class SemanticGate:
         """Classify one batch; the caller runs the model only over
         ``admission.model_frames(frames)`` and binds the output."""
         assert self.active
+        obs = self.obs
+        t0 = obs.now() if obs.enabled else 0
         n = int(frames.shape[0])
         adm = Admission(feed=feed, variant=variant, n=n, gate=self,
                         mismatch_min_tasks=self.config.mismatch_min_tasks)
@@ -163,6 +170,20 @@ class SemanticGate:
                     self.cache.insert(feed, key, new)
                     adm.attach_fill(new, j)
                     self._count(feed, "cache_misses")
+        if obs.enabled:
+            track = f"feed:{feed}"
+            tr = obs.tracer
+            tr.span("gate", "gate", t0, obs.now(), track=track, n=n)
+            revals = len(adm.reval)
+            hits = n - adm.n_model
+            misses = adm.n_model - revals
+            if hits:
+                tr.instant("gate:hit", "gate", track=track, n=hits)
+            if misses:
+                tr.instant("gate:miss", "gate", track=track, n=misses)
+            if revals:
+                tr.instant("gate:revalidate", "gate", track=track,
+                           n=revals)
         return adm
 
     # ------------------------------------------------------------------

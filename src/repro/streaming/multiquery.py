@@ -256,9 +256,17 @@ class MultiQueryRuntime(RunScaffold):
         tail_mllm_start = [mllm_frames_of(tail)
                            for tail in self.shared.tails]
 
+        obs = self.obs
+
         def advance(batch):
             self._stamp(batch)
-            self._advance(batch, pcounts, counts, windows)
+            if obs.enabled:
+                t_arr = obs.now()
+                n0 = len(batch["idx"])
+                self._advance(batch, pcounts, counts, windows)
+                obs.slo.record("mq", (obs.now() - t_arr) / 1e6, n=n0)
+            else:
+                self._advance(batch, pcounts, counts, windows)
 
         t0 = time.perf_counter()
         drive_stream(stream, n_frames, self.micro_batch,
@@ -317,17 +325,26 @@ class MultiQueryRuntime(RunScaffold):
 
         base = self._source_index
         done = 0
+        obs = self.obs
         t0 = time.perf_counter()
         while done < n_frames or pendings:
             progressed = False
             if done < n_frames and len(pendings) < self.max_pending:
                 take = min(self.micro_batch, n_frames - done)
+                t_pull = obs.now() if obs.enabled else 0
                 frames, labels = stream.batch(take)
                 labels_all.extend(labels)
                 batch = {"frames": frames,
                          "idx": np.arange(base + done, base + done + take)}
                 done += take
                 self._stamp(batch)
+                if obs.enabled:
+                    t_arr = obs.now()
+                    obs.tracer.span("ingest", "ingest", t_pull, t_arr,
+                                    track="feed:mq", n=take)
+                    batch["_obs_t0"] = t_arr
+                    batch["_obs_n"] = take
+                    g.arrival[0] = t_arr
                 p = g.start(batch)
                 if p is not None:
                     pendings.append((g, p))
@@ -347,6 +364,10 @@ class MultiQueryRuntime(RunScaffold):
                  tail_mllm_start) -> MultiQueryResult:
         sinks = [tail[-1] for tail in self.shared.tails]
         n_q = len(self.shared.tails)
+        if self.obs.enabled:
+            self.obs.metrics.set_gauge("run/wall_s", wall)
+            if self.server is not None:
+                self.obs.metrics.ingest("server", self.server.stats)
         prefix_mllm = mllm_frames_of(self.shared.prefix) - prefix_mllm_start
         per_query: Dict[str, RunResult] = {}
         total_mllm = prefix_mllm

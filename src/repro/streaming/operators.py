@@ -115,6 +115,11 @@ class OpContext:
     #: extract cache.  None (default) keeps every extract path exactly as
     #: it was; an *inactive* gate (threshold 0) is equally inert.
     gate: Any = None
+    #: optional ``repro.obs.Observability`` — frame-lifecycle tracing +
+    #: metrics + SLO accounting.  None (default) resolves to the inert
+    #: ``NULL_OBS``: instrumented paths pay only no-op calls and stay
+    #: bitwise identical to un-instrumented serving.
+    obs: Any = None
     frame_shape: Tuple[int, int, int] = (3, 128, 256)
     #: micro-batch size the driving runtime uses — operators that estimate
     #: stream density (adaptive pruning) read it instead of guessing
@@ -421,6 +426,9 @@ class MLLMExtractOp(Op):
         # inside SharedExtractServer.submit instead, keyed by feed name
         self._gate = ctx.gate
         self._gate_feed = f"op:{id(self)}"
+        if self._gate is not None and ctx.obs is not None:
+            # the gate emits its own consult spans / hit-miss events
+            self._gate.obs = ctx.obs
 
     def resolve_variant(self, n: int) -> str:
         """Pick the physical variant for a batch of ``n`` surviving frames.

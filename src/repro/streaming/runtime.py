@@ -22,6 +22,7 @@ from typing import Any, Dict, List
 
 import numpy as np
 
+from repro.obs import resolve_obs
 from repro.streaming.operators import (
     MLLMExtractOp,
     Op,
@@ -84,6 +85,9 @@ class RunScaffold:
                        ops: List[Op]) -> None:
         self.ctx = dataclasses.replace(ctx, micro_batch=micro_batch)
         self.micro_batch = micro_batch
+        #: observability handle (``ctx.obs`` or the inert NULL_OBS) — one
+        #: resolution point for every scaffolded executor
+        self.obs = resolve_obs(getattr(ctx, "obs", None))
         for op in ops:
             op.open(self.ctx)
         self._source_index = 0
@@ -182,13 +186,26 @@ class StreamRuntime(RunScaffold):
         mllm_start = self._begin_run(stream, warmup, warm_advance,
                                      self.plan.ops)
 
+        obs = self.obs
+
         def advance(batch):
             self._stamp(batch)
+            t_b = obs.now() if obs.enabled else 0
+            n0 = len(batch["idx"])
             for op in self.plan.ops:
                 counts[op.name] += len(batch["idx"])
-                batch = op.process(batch)
+                if obs.enabled:
+                    t_op = obs.now()
+                    batch = op.process(batch)
+                    obs.tracer.span(f"op:{op.name}", "prefix", t_op,
+                                    obs.now(), track="stream",
+                                    n=len(batch["idx"]))
+                else:
+                    batch = op.process(batch)
                 if "window_results" in batch:
                     window_results.extend(batch.pop("window_results"))
+            if obs.enabled:
+                obs.slo.record("stream", (obs.now() - t_b) / 1e6, n=n0)
 
         t0 = time.perf_counter()
         drive_stream(stream, n_frames, self.micro_batch,
@@ -196,6 +213,8 @@ class StreamRuntime(RunScaffold):
         if flush:
             flush_ops(self.plan.ops, window_results.extend)
         wall = time.perf_counter() - t0
+        if obs.enabled:
+            obs.metrics.set_gauge("run/wall_s", wall)
 
         mllm_frames = mllm_frames_of(self.plan.ops) - mllm_start
         return RunResult(
