@@ -45,6 +45,20 @@ def run_all() -> List[str]:
     us = _time(lambda a, b: frame_diff(a, b, regions=(4, 8)), frames, prev)
     rows.append(f"frame_diff_16f,{us:.1f},{2*mb/(us/1e6)/1024:.2f}GiB/s")
 
+    # fused prefix: diff + color fraction + preprocess + gate signature in
+    # one pass (the per-micro-batch chain FusedPrefixOp dispatches once)
+    from repro.kernels.fused_prefix.kernel import out_frame_shape
+    from repro.kernels.fused_prefix.ops import fused_prefix
+    from repro.semantic.signature import signature_layout
+
+    spec = (("diff", (4, 8)), ("color", (190.0, 40.0, 40.0), None),
+            ("preprocess", (64, 0, 64, 256), 2, False))
+    gy, gx, _, proj = signature_layout(out_frame_shape(spec, (3, 128, 256)))
+    spec = spec + (("signature", (gy, gx)),)
+    pj = jnp.asarray(proj)
+    us = _time(lambda a, b: fused_prefix(a, b, pj, spec=spec), frames, prev)
+    rows.append(f"fused_prefix_16f,{us:.1f},{2*mb/(us/1e6)/1024:.2f}GiB/s")
+
     # flash attention fallback (prefill path)
     from repro.kernels.flash_attention.ops import flash_attention
 

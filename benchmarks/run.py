@@ -88,15 +88,15 @@ def main() -> None:
     ap.add_argument("--skip-samsara", action="store_true")
     ap.add_argument("--sections", default=None,
                     help="comma list of top-level sections to run "
-                         "(kernels,serving,samsara,fig_semantic — the "
-                         "last is the semantic-gating figure as its own "
-                         "section, written to BENCH_fig_semantic.json); "
-                         "default: all")
+                         "(kernels,serving,samsara,fig_semantic,"
+                         "fig_fused — the last two are figures promoted "
+                         "to their own sections, each written to "
+                         "BENCH_<name>.json); default: all")
     ap.add_argument("--samsara-figs", default=None,
                     help="comma list of Saṃsāra figures (fig1b,fig5,"
                          "table2,fig_mq,fig_ms,fig_pipeline,fig_fleet,"
-                         "fig_semantic); overrides --quick's figure "
-                         "choice")
+                         "fig_semantic,fig_fused); overrides --quick's "
+                         "figure choice")
     ap.add_argument("--quick-models", action="store_true",
                     help="tiny smoke models + short serving streams for "
                          "the Saṃsāra section (disables its result cache "
@@ -107,7 +107,7 @@ def main() -> None:
     args = ap.parse_args()
 
     wanted = args.sections.split(",") if args.sections else None
-    known = {"kernels", "serving", "samsara", "fig_semantic"}
+    known = {"kernels", "serving", "samsara", "fig_semantic", "fig_fused"}
     assert wanted is None or set(wanted) <= known, \
         f"unknown sections {sorted(set(wanted) - known)} (known: {sorted(known)})"
 
@@ -128,24 +128,25 @@ def main() -> None:
         figs = args.samsara_figs.split(",") if args.samsara_figs else None
         # a figure also requested as its own top-level section must not
         # run twice when the samsara default list would include it
-        exclude = ["fig_semantic"] \
-            if wanted is not None and "fig_semantic" in wanted else None
+        exclude = [s for s in ("fig_semantic", "fig_fused")
+                   if wanted is not None and s in wanted] or None
         sections.append(("samsara",
                          lambda: samsara_bench.run_all(
                              quick=args.quick,
                              quick_models=args.quick_models,
                              sections=figs, exclude=exclude)))
-    if want("fig_semantic") and wanted is not None:
-        # its own top-level section (not just a samsara figure) so the
-        # gating tier's rows land in a dedicated BENCH_fig_semantic.json
-        # next to the existing artifacts
-        from benchmarks import samsara_bench
+    for own in ("fig_semantic", "fig_fused"):
+        if want(own) and wanted is not None:
+            # its own top-level section (not just a samsara figure) so
+            # these rows land in a dedicated BENCH_<name>.json next to
+            # the existing artifacts
+            from benchmarks import samsara_bench
 
-        sections.append(("fig_semantic",
-                         lambda: samsara_bench.run_all(
-                             quick=args.quick,
-                             quick_models=args.quick_models,
-                             sections=["fig_semantic"])))
+            sections.append((own,
+                             lambda own=own: samsara_bench.run_all(
+                                 quick=args.quick,
+                                 quick_models=args.quick_models,
+                                 sections=[own])))
 
     print("name,us_per_call,derived")
     failed: List[str] = []

@@ -53,6 +53,15 @@
                                 hit/miss/revalidation/mismatch rates, and
                                 bitwise-identical outputs when the gate is
                                 disabled (threshold=0).
+  fig_fused                   : fused prefix execution — the 4-op
+                                surviving-frame prefix plus the gate
+                                signature as ONE compiled device pass per
+                                micro-batch vs the unfused op sequence:
+                                ≥ 3× fewer prefix dispatches, prefix wall
+                                no worse, bitwise-identical results,
+                                end-to-end serving fps, and the physical
+                                phase's calibrated fuse/refuse decision
+                                in both stream-density regimes.
 
 Wall-clock numbers are CPU-scale; the *relative* speedups are the paper's
 claims being reproduced.  Results are written to reports/benchmarks/.
@@ -710,6 +719,195 @@ def fig_fleet(ctx, cache) -> List[str]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Fused prefix execution — one device pass per surviving micro-batch
+# ---------------------------------------------------------------------------
+
+FUSED_MB = 16           # serving micro-batch the fused pass dispatches on
+FUSED_CAR_RATE = 0.2    # dense stream: survivors actually reach the tail
+
+
+def _fused_chain():
+    from repro.streaming.operators import (
+        CheapColorFilterOp,
+        DetectOp,
+        FusedPreprocessOp,
+        SkipOp,
+    )
+
+    return [SkipOp(), CheapColorFilterOp(color="red", min_frac=0.0),
+            FusedPreprocessOp(crop=(64, 0, 64, 256), factor=2),
+            DetectOp(threshold=0.1)]
+
+
+def fig_fused(ctx, cache, frames: int = MS_FRAMES) -> List[str]:
+    """Fused prefix execution: the 4-op surviving-frame prefix (Skip's
+    frame diff, cheap color filter, fused preprocess, TinyDet) **plus**
+    the semantic gate's ``TemporalSignature`` compiled into ONE device
+    pass per micro-batch (``FusedPrefixOp``), vs the unfused op sequence
+    — one dispatch per op plus the gate's separate signature pass.
+
+    Claims measured: ≥ 3× fewer prefix dispatches per micro-batch (5 → 1
+    on the 4-op chain), fused prefix wall per micro-batch no worse than
+    unfused on the dense stream, bitwise-identical results (kept rows,
+    transformed frames, gate signature), end-to-end serving fps through
+    ``MultiStreamRuntime``, and the physical phase's calibrated choice in
+    both regimes — fuse where the one-pass wins, refuse on the sparse
+    default stream where Skip kills nearly every row before the
+    expensive stages (fusing there would compute them on all rows)."""
+    import copy
+
+    from repro.core.costs import CostCatalog
+    from repro.core.physical import PhysicalOptimizer
+    from repro.scheduler import Feed, MultiStreamRuntime
+    from repro.semantic.signature import TemporalSignature
+    from repro.streaming.fused import FusedPrefixOp
+    from repro.streaming.operators import MLLMExtractOp
+
+    key = ("FUSED", ("fused-v1", str(frames), str(FUSED_MB),
+                     str(FUSED_CAR_RATE)))
+    if key in cache:
+        out = cache[key]
+    else:
+        chain = _fused_chain()
+        stream = TollBoothStream(seed=3, car_rate=FUSED_CAR_RATE)
+        batches = [stream.batch(FUSED_MB)[0]
+                   for _ in range(max(frames // FUSED_MB, 4))]
+        sig = TemporalSignature()
+
+        def run_unfused(record=None):
+            ops = [copy.deepcopy(o) for o in chain]
+            for o in ops:
+                o.open(ctx)
+                o.reset()
+            for fr in batches:
+                b = {"frames": fr, "idx": np.arange(fr.shape[0])}
+                for o in ops:           # the runtime's chain walk
+                    if b["frames"].shape[0] == 0:
+                        break
+                    b = o.process(b)
+                s = sig.features(b["frames"]) \
+                    if b["frames"].shape[0] else None
+                if record is not None:
+                    record.append((b, s))
+
+        def run_fused(record=None):
+            fop = FusedPrefixOp(
+                stage_ops=tuple(copy.deepcopy(o) for o in chain), sig=True)
+            fop.open(ctx)
+            fop.reset()
+            for fr in batches:
+                b = fop.process({"frames": fr,
+                                 "idx": np.arange(fr.shape[0])})
+                if record is not None:
+                    record.append(b)
+
+        ru: List = []
+        rf: List = []
+        run_unfused(ru)     # compile warmup doubles as the bitwise pass
+        run_fused(rf)
+        bitwise = True
+        for (bu, su), bf in zip(ru, rf):
+            feats, emb = bf.pop("_sig")
+            bitwise = bitwise and np.array_equal(bu["idx"], bf["idx"])
+            if bu["idx"].shape[0] == 0:
+                bitwise = bitwise and feats.shape[0] == 0
+                continue
+            bitwise = bitwise \
+                and np.array_equal(bu["frames"], bf["frames"]) \
+                and np.array_equal(np.asarray(su[0]), feats) \
+                and np.array_equal(np.asarray(su[1]), emb)
+
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            run_unfused()
+        unfused_us = (time.perf_counter() - t0) / (reps * len(batches)) * 1e6
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            run_fused()
+        fused_us = (time.perf_counter() - t0) / (reps * len(batches)) * 1e6
+
+        # ---- end-to-end serving: fused vs unfused plan -----------------
+        def plan(fuse):
+            p = get_query("Q2").naive_plan()
+            ops = _fused_chain()
+            if fuse:
+                ops = [FusedPrefixOp(stage_ops=tuple(ops), sig=True)]
+            for op in ops:  # each lands immediately before the extract
+                p.insert_before(MLLMExtractOp, op)
+            return p
+
+        def run_ms(fuse):
+            ms = MultiStreamRuntime(
+                [Feed("tb",
+                      TollBoothStream(seed=3, car_rate=FUSED_CAR_RATE),
+                      [plan(fuse)])],
+                ctx, micro_batch=FUSED_MB)
+            return ms.run(frames)
+
+        base = run_ms(False)
+        fused = run_ms(True)
+        bq = base.feeds["tb"].per_query["Q2"]
+        fq = fused.feeds["tb"].per_query["Q2"]
+        e2e_identical = fq.outputs == bq.outputs \
+            and fq.window_results == bq.window_results
+
+        # ---- the physical phase's calibrated decision, both regimes ----
+        def decide(sample):
+            p = get_query("Q2").naive_plan()
+            for op in _fused_chain():
+                p.insert_before(MLLMExtractOp, op)
+            report: Dict[str, Any] = {"decisions": []}
+            PhysicalOptimizer(ctx)._fuse_prefix(
+                p, report, CostCatalog(), None, sample)
+            return report["fused_prefix"]
+
+        dense = decide(TollBoothStream(
+            seed=3, car_rate=FUSED_CAR_RATE).batch(FUSED_MB)[0])
+        sparse = decide(TollBoothStream(seed=404).batch(64)[0])
+
+        out = {
+            "dispatches_fused": 1,
+            # one jitted call per member op + the gate's signature pass
+            "dispatches_unfused": len(chain) + 1,
+            "chain_len": len(chain),
+            "fused_us": fused_us, "unfused_us": unfused_us,
+            "bitwise": bitwise,
+            "fused_fps": fused.fps, "base_fps": base.fps,
+            "e2e_identical": e2e_identical,
+            "dense": dense, "sparse": sparse,
+        }
+        cache[key] = out
+
+    ratio = out["dispatches_unfused"] / max(out["dispatches_fused"], 1)
+    rows = [
+        f"fig_fused,dispatches,{out['dispatches_fused']},"
+        f"unfused={out['dispatches_unfused']};reduction={ratio:.1f}x;"
+        f"target>=3x;chain={out['chain_len']}ops+signature",
+        f"fig_fused,prefix_wall_us,{out['fused_us']:.1f},"
+        f"unfused={out['unfused_us']:.1f};"
+        f"speedup={out['unfused_us'] / max(out['fused_us'], 1e-9):.2f}x;"
+        f"micro_batch={FUSED_MB}",
+        f"fig_fused,bitwise,{out['bitwise']},kept rows + frames + gate "
+        "signature identical fused vs unfused",
+        f"fig_fused,fps,{out['fused_fps']:.2f},"
+        f"unfused={out['base_fps']:.2f};"
+        f"speedup={out['fused_fps'] / max(out['base_fps'], 1e-9):.2f}x;"
+        f"e2e_identical={out['e2e_identical']}",
+        f"fig_fused,decision_dense,{out['dense']['fused']},"
+        f"fused_us={out['dense']['fused_us']:.0f};"
+        f"unfused_us={out['dense']['unfused_us']:.0f};"
+        f"batch={out['dense']['batch']}",
+        f"fig_fused,decision_sparse,{out['sparse']['fused']},"
+        f"fused_us={out['sparse']['fused_us']:.0f};"
+        f"unfused_us={out['sparse']['unfused_us']:.0f};"
+        f"batch={out['sparse']['batch']};"
+        "calibrated refusal: Skip kills the batch up front",
+    ]
+    return rows
+
+
 CACHE_PATH = os.path.join(REPORT_DIR, "samsara_bench.json")
 
 #: bump when runtime semantics change measured results (v2: end-of-stream
@@ -717,9 +915,10 @@ CACHE_PATH = os.path.join(REPORT_DIR, "samsara_bench.json")
 #: the SharedExtractServer; v4: pipelined dispatch-ahead serving is the
 #: multi-stream default and CheapColor/Detect normalize per frame;
 #: v5: fig_ms/fig_pipeline rows gain latency-percentile columns whose
-#: fields a v4 cache entry lacks) — a stale cache would silently mix
-#: semantics
-CACHE_VERSION = 5
+#: fields a v4 cache entry lacks; v6: fused-prefix execution — one device
+#: pass per surviving micro-batch — changes prefix dispatch behavior and
+#: adds fig_fused) — a stale cache would silently mix semantics
+CACHE_VERSION = 6
 
 
 def _load_cache() -> Dict:
@@ -774,6 +973,7 @@ def run_all(quick: bool = False, use_cache: bool = True,
         "fig_pipeline": lambda c, k: fig_pipeline(c, k, frames=ms_frames),
         "fig_fleet": fig_fleet,
         "fig_semantic": lambda c, k: fig_semantic(c, k, frames=ms_frames),
+        "fig_fused": lambda c, k: fig_fused(c, k, frames=ms_frames),
     }
     if sections is None:
         sections = ["fig1b"] if quick else list(figs)

@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # Smoke tier: the fast test suite, a quick-mode run of every example, and
 # the quick serving benchmarks (fig_multistream + fig_pipeline +
-# fig_semantic on tiny models — the per-PR perf trajectory, written to
-# reports/benchmarks/).
+# fig_semantic + fig_fused on tiny models — the per-PR perf trajectory,
+# written to reports/benchmarks/).
 #
 #   scripts/smoke.sh              # everything
 #   scripts/smoke.sh tests        # tests only
@@ -51,8 +51,8 @@ EOF
 fi
 
 if [[ "$what" == "all" || "$what" == "bench" ]]; then
-    echo "=== benchmarks: fig_multistream + fig_pipeline + fig_semantic (quick models) ==="
-    python -m benchmarks.run --sections samsara,fig_semantic \
+    echo "=== benchmarks: fig_multistream + fig_pipeline + fig_semantic + fig_fused (quick models) ==="
+    python -m benchmarks.run --sections samsara,fig_semantic,fig_fused \
         --samsara-figs fig_ms,fig_pipeline --quick-models \
         --json reports/benchmarks
 fi

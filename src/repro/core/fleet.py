@@ -440,7 +440,19 @@ class FleetOptimizer:
                 "different source streams")
             return {}
         mis = {k: solo_plans[k].index_of(MLLMExtractOp) for k in members}
-        chains = [solo_plans[k].ops[:mis[k]] for k in members]
+
+        def expand(ops):
+            # class-intersection joining reasons about the unfused op
+            # descriptors; a physically fused prefix re-expands here so
+            # fusion never blocks cross-query sharing (the runtimes
+            # re-fuse per group where calibration still favors it)
+            out = []
+            for op in ops:
+                stage_ops = getattr(op, "unfuse", None)
+                out.extend(op.unfuse() if stage_ops is not None else [op])
+            return out
+
+        chains = [expand(solo_plans[k].ops[:mis[k]]) for k in members]
         joined = joined_prefix(chains)
 
         # joint physical model: cheapest variant viable for every member

@@ -94,10 +94,11 @@ class PhysicalOptimizer:
     def run(self, plan: Plan, pctx) -> Tuple[Plan, Dict[str, Any]]:
         return self.optimize(plan, pctx.query, pctx.stream_factory,
                              pctx.run_fn, val_frames=pctx.val_frames,
-                             catalog=pctx.catalog)
+                             catalog=pctx.catalog,
+                             sample=pctx.sample_frames())
 
     def optimize(self, plan: Plan, query, stream_factory, run_fn,
-                 val_frames: int = 512, catalog=None
+                 val_frames: int = 512, catalog=None, sample=None
                  ) -> Tuple[Plan, Dict[str, Any]]:
         report: Dict[str, Any] = {"phase": "physical", "decisions": []}
         new = plan.clone()
@@ -150,4 +151,97 @@ class PhysicalOptimizer:
             "quantization: int8 weight path available for the chosen model "
             "(serving/quantize.py + Pallas int8_matmul on TPU); applied when "
             "the accuracy constraint still holds")
+
+        # ---- fused prefix execution (calibrated one-pass choice) -----------
+        self._fuse_prefix(new, report, catalog, stream_factory, sample)
         return new, report
+
+    # ------------------------------------------------------------------
+    def _fuse_prefix(self, plan: Plan, report: Dict[str, Any], catalog,
+                     stream_factory, sample) -> None:
+        """Replace the plan's surviving-frame prefix with a single
+        ``FusedPrefixOp`` device pass — but only when the calibrated cost
+        model says the fused call beats the unfused op sequence on a
+        sample micro-batch.
+
+        Both alternatives are timed through ``catalog.calibrate_chain``
+        (fresh descriptor copies, so plan state is untouched) and
+        compared at the sample batch size with the fitted
+        ``T(n) = overhead + marginal·n`` model, survivor fractions
+        shrinking n down the unfused chain.  No catalog → no fusion:
+        this decision is always measurement-backed, never a guess."""
+        from repro.core.phases import SAMPLE_FRAMES, SAMPLE_SEED
+        from repro.streaming.fused import (
+            FUSABLE,
+            FusedPrefixOp,
+            fusable_segment,
+        )
+
+        report["fused_prefix"] = {"fused": False, "reason": "no catalog"}
+        if catalog is None:
+            return
+        mi = plan.index_of(MLLMExtractOp)
+        if mi is None:
+            report["fused_prefix"] = {"fused": False, "reason": "no extract"}
+            return
+        start = mi
+        while start > 0 and isinstance(plan.ops[start - 1], FUSABLE):
+            start -= 1
+        # every member is FUSABLE; trim from the left until the ordering
+        # constraints (Skip first, Detect last) hold too
+        while start < mi and not fusable_segment(plan.ops[start:mi]):
+            start += 1
+        seg = plan.ops[start:mi]
+        if len(seg) < 2:
+            report["fused_prefix"] = {
+                "fused": False, "reason": "segment too short",
+                "segment": [o.name for o in seg]}
+            return
+        if sample is None:
+            sample, _ = stream_factory(SAMPLE_SEED).batch(SAMPLE_FRAMES)
+
+        def copies(ops):
+            import dataclasses as _dc
+            return [type(o)(**{f.name: getattr(o, f.name)
+                               for f in _dc.fields(o) if f.init})
+                    for o in ops]
+
+        cand = FusedPrefixOp(stage_ops=tuple(copies(seg)), sig=True)
+        unfused_probe = copies(seg)
+        catalog.calibrate_chain(unfused_probe, sample, self.ctx)
+        catalog.calibrate_chain([cand], sample, self.ctx)
+
+        n = sample.shape[0]
+        unfused_us = _chain_cost_us(unfused_probe, n)
+        fused_us = _chain_cost_us([cand], n)
+        info = {"segment": [o.name for o in seg], "batch": n,
+                "fused_us": fused_us, "unfused_us": unfused_us,
+                "fused": fused_us <= unfused_us}
+        report["fused_prefix"] = info
+        if not info["fused"]:
+            report["decisions"].append(
+                f"fused prefix: refused — calibrated {fused_us:.0f}µs vs "
+                f"{unfused_us:.0f}µs unfused at batch {n}")
+            return
+        fop = FusedPrefixOp(stage_ops=tuple(seg), sig=True)
+        fop.cost_us = cand.cost_us
+        fop.overhead_us = cand.overhead_us
+        fop.pass_rate = cand.pass_rate
+        plan.ops[start:mi] = [fop]
+        plan.notes.append(f"physical: fused prefix ({len(seg)} ops -> 1 "
+                          "device pass)")
+        report["decisions"].append(
+            f"fused prefix: {'+'.join(o.name for o in seg)} -> one device "
+            f"pass — calibrated {fused_us:.0f}µs vs {unfused_us:.0f}µs "
+            f"unfused at batch {n} (gate signature included for free)")
+
+
+def _chain_cost_us(ops: List[Any], n: int) -> float:
+    """Expected chain wall time at batch size ``n`` under the calibrated
+    ``T = overhead + marginal·rows`` model, rows shrinking by each op's
+    measured survivor fraction."""
+    rows, total = float(n), 0.0
+    for op in ops:
+        total += max(op.overhead_us, 0.0) + max(op.cost_us, 0.0) * rows
+        rows *= min(max(op.pass_rate, 0.0), 1.0)
+    return total

@@ -15,4 +15,19 @@ Kernels:
   fused_preprocess — crop+downscale+normalize(+greyscale) in one HBM pass
                      (the semantic-optimization data-reduction operators, fused)
   frame_diff       — per-region frame differencing (Skip operator's condition)
+  fused_prefix     — a plan's whole surviving-frame prefix in one pass:
+                     frame diff + cheap color fractions + crop/downscale/
+                     normalize(+greyscale) + semantic-gate signature pooling
+                     (``streaming.fused.FusedPrefixOp`` adds the TinyDet
+                     forward inside the same jit — one dispatch per
+                     micro-batch for the whole pre-extract chain)
+
+Dispatch rules (every ops.py wrapper follows them):
+  * TPU backend      — the Pallas kernel, compiled (``_use_pallas()``).
+  * CPU/GPU backend  — the pure-jnp reference by default: it lowers to a
+    single fused XLA program under the wrapper's ``jax.jit``, so the
+    "one device pass" contract holds on every backend.
+  * ``interpret=True`` — the Pallas kernel in interpret mode on any
+    backend; the sweep tests use this to pin kernel math to the oracle
+    without TPU hardware.
 """

@@ -1,0 +1,168 @@
+"""Fused surviving-frame prefix Pallas kernel.
+
+Extends ``fused_preprocess`` with the rest of the streaming prefix: one
+program per frame reads the raw (C, H, W) uint8 frame (plus its
+predecessor when a diff stage is present) from HBM **once** and emits
+every per-frame statistic the chain needs — the (RY, RX) frame-diff
+activity grid, one near-color pixel fraction per cheap filter, the
+cropped/downscaled/normalized frame, and the semantic-gate signature
+pooling — as separate outputs of a single ``pl.pallas_call``.  The
+embedding projection (a tiny (B, D) @ (D, 16) matmul) runs outside the
+kernel on the same device, inside the same jit.
+
+Grid: (B,).  VMEM per program: the raw frame pair as f32 plus the
+reduced intermediates — ≤ ~1 MiB for the 3×128×256 streaming shape, in
+budget.  W = 256 keeps the lane dimension aligned.
+
+Stage math mirrors ``ref.fused_prefix_ref`` expression for expression
+(which in turn inlines the unfused operators' jitted bodies); the sweep
+test ``tests/test_kernels.py::test_fused_prefix_sweep`` pins
+interpret-mode output to the oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def out_frame_shape(spec, shape: Tuple[int, int, int]
+                    ) -> Tuple[int, int, int]:
+    """(C, H, W) after the spec's transform stages."""
+    c, h, w = shape
+    for stage in spec:
+        if stage[0] == "crop":
+            h, w = stage[1][2], stage[1][3]
+        elif stage[0] == "preprocess":
+            _, crop, factor, grey = stage
+            h, w = crop[2] // factor, crop[3] // factor
+            # grey output is host-re-expanded to 3 channels; c unchanged
+    return c, h, w
+
+
+def _prefix_kernel(*refs, spec, sig_d: int):
+    """One frame: walk the stages, writing each statistic's output ref."""
+    it = iter(refs)
+    x_ref = next(it)
+    prev_ref = next(it) if any(s[0] == "diff" for s in spec) else None
+    d_ref = next(it) if any(s[0] == "diff" for s in spec) else None
+    ncolor = sum(1 for s in spec if s[0] == "color")
+    frac_ref = next(it) if ncolor else None
+    o_ref = next(it)
+    feat_ref = next(it) if any(s[0] == "signature" for s in spec) else None
+
+    cur = x_ref[0]                                    # (C, H, W)
+    ci = 0
+    for stage in spec:
+        kind = stage[0]
+        if kind == "diff":
+            ry, rx = stage[1]
+            c, h, w = cur.shape
+            a = cur.astype(jnp.float32)
+            b = prev_ref[0].astype(jnp.float32)
+            dd = jnp.abs(a - b) / 255.0
+            dd = dd.reshape(c, ry, h // ry, rx, w // rx)
+            d_ref[0] = dd.mean(axis=(0, 2, 4))
+        elif kind == "color":
+            roi = stage[2]
+            x = cur
+            if roi is not None:
+                y0, x0, h, w = roi
+                x = x[:, y0:y0 + h, x0:x0 + w]
+            x = x.astype(jnp.float32)
+            norm = x.max() <= 8.0
+            x = jnp.where(norm, (x * 0.25 + 0.5) * 255.0, x)
+            # per-channel scalar arithmetic: Pallas kernels cannot
+            # capture array constants, so the target color stays Python
+            # floats (same trick as fused_preprocess's mean/std)
+            dist = jnp.sqrt(sum((x[k] - float(stage[1][k])) ** 2
+                                for k in range(x.shape[0])))
+            frac_ref[0, ci] = (dist < 70.0).astype(jnp.float32).mean()
+            ci += 1
+        elif kind == "crop":
+            y0, x0, h, w = stage[1]
+            cur = cur[:, y0:y0 + h, x0:x0 + w]
+        elif kind == "preprocess":
+            _, crop, factor, grey = stage
+            y0, x0, ch, cw = crop
+            c = cur.shape[0]
+            x = cur[:, y0:y0 + ch, x0:x0 + cw].astype(jnp.float32) / 255.0
+            x = x.reshape(c, ch // factor, factor,
+                          cw // factor, factor).mean(axis=(2, 4))
+            chans = [(x[k] - 0.5) / 0.25 for k in range(c)]
+            if grey:
+                lum = (0.299, 0.587, 0.114)
+                g = chans[0] * lum[0]
+                for k in range(1, c):
+                    g = g + chans[k] * lum[k]
+                chans = [g] * c                       # host-repeat inlined
+            cur = jnp.stack(chans, axis=0)
+        elif kind == "signature":
+            gy, gx = stage[1]
+            c, h, w = cur.shape
+            x = cur.astype(jnp.float32)
+            raw = x.max() > 8.0
+            x = jnp.where(raw, (x / 255.0 - 0.5) / 0.25, x)
+            p = x.reshape(c, gy, h // gy, gx, w // gx)
+            feat_ref[0] = p.mean(axis=(2, 4)).reshape(sig_d)
+    o_ref[0] = cur.astype(o_ref.dtype)
+
+
+def fused_prefix_kernel(frames: jax.Array, prevs=None, proj=None, *,
+                        spec, interpret: bool = False):
+    """frames (B, C, H, W); returns (d, fracs, x, feats, emb) like the
+    oracle (absent stages -> None / empty tuple)."""
+    b, c, h, w = frames.shape
+    has_diff = any(s[0] == "diff" for s in spec)
+    has_sig = any(s[0] == "signature" for s in spec)
+    ncolor = sum(1 for s in spec if s[0] == "color")
+    oc, oh, ow = out_frame_shape(spec, (c, h, w))
+
+    gy = gx = sig_d = 0
+    if has_sig:
+        gy, gx = next(s[1] for s in spec if s[0] == "signature")
+        sig_d = oc * gy * gx
+
+    frame_spec = pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))
+    in_specs = [frame_spec] + ([frame_spec] if has_diff else [])
+    out_specs, out_shape = [], []
+    if has_diff:
+        ry, rx = next(s[1] for s in spec if s[0] == "diff")
+        out_specs.append(pl.BlockSpec((1, ry, rx), lambda i: (i, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((b, ry, rx), jnp.float32))
+    if ncolor:
+        out_specs.append(pl.BlockSpec((1, ncolor), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((b, ncolor), jnp.float32))
+    out_dtype = jnp.float32 if any(s[0] == "preprocess" for s in spec) \
+        else frames.dtype
+    out_specs.append(pl.BlockSpec((1, oc, oh, ow),
+                                  lambda i: (i, 0, 0, 0)))
+    out_shape.append(jax.ShapeDtypeStruct((b, oc, oh, ow), out_dtype))
+    if has_sig:
+        out_specs.append(pl.BlockSpec((1, sig_d), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((b, sig_d), jnp.float32))
+
+    args = (frames, prevs) if has_diff else (frames,)
+    outs = pl.pallas_call(
+        functools.partial(_prefix_kernel, spec=spec, sig_d=sig_d),
+        grid=(b,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    outs = list(outs) if isinstance(outs, (tuple, list)) else [outs]
+
+    d = outs.pop(0) if has_diff else None
+    fracs = tuple(outs.pop(0).T) if ncolor else ()
+    x = outs.pop(0)
+    feats = emb = None
+    if has_sig:
+        from repro.kernels.fused_prefix.ref import project_rowwise
+
+        feats = outs.pop(0)
+        emb = project_rowwise(feats, proj)
+    return d, fracs, x, feats, emb

@@ -1,0 +1,111 @@
+"""Pure-jnp oracle for the fused surviving-frame prefix chain.
+
+One traced function evaluates every *pixel* stage of a plan's prefix —
+frame-diff activity, cheap color fractions, crop, fused preprocess (and
+its grey re-expansion), and the semantic-gate signature pooling — in plan
+order on the full micro-batch.  Filters never transform frames, so their
+per-row statistics computed here on all rows equal the values the unfused
+ops compute on their compacted survivor batches (the per-row determinism
+contract the serving tier already relies on for coalesced-vs-solo
+equality); transforms apply to every row exactly as the unfused chain
+applies them to survivors.
+
+The stage expressions are *inlined copies* of the unfused operators'
+math (``frame_diff_ref``, ``CheapColorFilterOp.open``'s jitted body,
+``fused_preprocess_ref``, ``TemporalSignature._fn``) — any drift breaks
+the bitwise-identity contract ``tests/test_fused_prefix.py`` enforces.
+
+``spec`` is a static tuple of stage tuples, in plan order:
+
+  ("diff", (ry, rx))                      at most one, first if present
+  ("color", (r, g, b), roi_or_None)       per CheapColorFilterOp
+  ("crop", (y0, x0, h, w))                per CropOp
+  ("preprocess", (y0, x0, h, w), f, grey) per FusedPreprocessOp
+  ("signature", (gy, gx))                 at most one, last if present
+
+Returns ``(d, fracs, x, feats, emb)``: the (B, ry, rx) diff grid (or
+None), a tuple of per-color (B,) fractions, the transformed frames, and
+the signature feats/emb (or None, None).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.frame_diff.ref import frame_diff_ref
+from repro.kernels.fused_preprocess.ref import fused_preprocess_ref
+
+
+def project_rowwise(feats, proj):
+    """``feats @ proj`` as broadcast-multiply + axis reduce.
+
+    A plain gemm's accumulation order varies with the batch dimension
+    and with the surrounding fusion context (XLA picks different kernels
+    for different M), so the same row can round differently between the
+    gate's padded-survivor program and the fused prefix's full-micro-
+    batch program.  The explicit reduce keeps each row's accumulation
+    order fixed — per-row bitwise determinism is what lets the fused
+    path hand its signatures to the gate.  ``TemporalSignature`` imports
+    this so both programs share the one formulation."""
+    return (feats[:, :, None] * proj[None]).sum(axis=1)
+
+
+def _color_frac(x: jax.Array, rgb) -> jax.Array:
+    """CheapColorFilterOp's jitted body, verbatim."""
+    x = x.astype(jnp.float32)
+    norm = x.reshape(x.shape[0], -1).max(axis=1) <= 8.0
+    x = jnp.where(norm[:, None, None, None],
+                  (x * 0.25 + 0.5) * 255.0, x)
+    d = jnp.linalg.norm(
+        x.transpose(0, 2, 3, 1) - jnp.asarray(rgb, jnp.float32), axis=-1)
+    near = (d < 70.0).astype(jnp.float32)
+    return near.mean(axis=(1, 2))
+
+
+def _signature(x: jax.Array, gy: int, gx: int, proj: jax.Array):
+    """``TemporalSignature._fn``'s jitted body, verbatim."""
+    c, h, w = x.shape[1], x.shape[2], x.shape[3]
+    d = c * gy * gx
+    x = x.astype(jnp.float32)
+    raw = x.reshape(x.shape[0], -1).max(axis=1) > 8.0
+    x = jnp.where(raw[:, None, None, None], (x / 255.0 - 0.5) / 0.25, x)
+    p = x.reshape(x.shape[0], c, gy, h // gy, gx, w // gx)
+    feats = p.mean(axis=(3, 5)).reshape(x.shape[0], d)
+    emb = project_rowwise(feats, proj)
+    return feats, emb
+
+
+def fused_prefix_ref(frames: jax.Array, prevs=None, proj=None, *, spec):
+    cur = frames
+    d = None
+    fracs = []
+    feats = emb = None
+    for stage in spec:
+        kind = stage[0]
+        if kind == "diff":
+            d = frame_diff_ref(frames, prevs, regions=stage[1])
+        elif kind == "color":
+            roi = stage[2]
+            x = cur
+            if roi is not None:
+                y0, x0, h, w = roi
+                x = x[:, :, y0:y0 + h, x0:x0 + w]
+            fracs.append(_color_frac(x, stage[1]))
+        elif kind == "crop":
+            y0, x0, h, w = stage[1]
+            cur = cur[:, :, y0:y0 + h, x0:x0 + w]
+        elif kind == "preprocess":
+            _, crop, factor, grey = stage
+            ch, cw = cur.shape[2], cur.shape[3]
+            cur = fused_preprocess_ref(cur, crop=crop, factor=factor,
+                                       grey=grey)
+            if grey:
+                # FusedPreprocessOp re-expands grey to 3 channels on the
+                # host; downstream stages must see the same frames
+                cur = jnp.repeat(cur, 3, axis=1)
+        elif kind == "signature":
+            gy, gx = stage[1]
+            feats, emb = _signature(cur, gy, gx, proj)
+        else:  # pragma: no cover - spec is validated by FusedPrefixOp
+            raise ValueError(f"unknown fused-prefix stage {kind!r}")
+    return d, tuple(fracs), cur, feats, emb

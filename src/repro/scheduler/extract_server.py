@@ -355,8 +355,8 @@ class SharedExtractServer:
 
     # ------------------------------------------------------------------
     def submit(self, variant: str, frames: np.ndarray,
-               feed: str = "") -> Union[ExtractRequest,
-                                        GatedExtractRequest]:
+               feed: str = "", sig=None) -> Union[ExtractRequest,
+                                                  GatedExtractRequest]:
         """Queue an extract; the returned request reports ``done`` once a
         ``dispatch``ed forward completes (observed by ``poll``/``wait``)
         or a blocking ``drain()`` runs it.  "adaptive" must be resolved by
@@ -367,12 +367,15 @@ class SharedExtractServer:
         per-feed keyframe cache: near-duplicate rows are answered from
         cached extract outputs and only the admission's model rows enter
         the dispatch queue — a batch whose every row hits short-circuits
-        dispatch entirely (``done`` immediately, zero queued frames)."""
+        dispatch entirely (``done`` immediately, zero queued frames).
+
+        ``sig`` forwards a fused-prefix-computed ``(feats, emb)`` pair
+        for these frames to the gate (see ``SemanticGate.admit``)."""
         assert variant in self.VARIANTS, variant
         assert frames.ndim == 4 and frames.shape[0] > 0, frames.shape
         self.stats["requests"] += 1
         if self.gate is not None and self.gate.active:
-            adm = self.gate.admit(feed, variant, frames)
+            adm = self.gate.admit(feed, variant, frames, sig=sig)
             inner = None
             if adm.n_model:
                 inner = self._enqueue(variant, adm.model_frames(frames),

@@ -50,6 +50,7 @@ from repro.scheduler.extract_server import (
     settle_fifo,
 )
 from repro.scheduler.sharing_tree import SharingForest, SharingTreePlanner
+from repro.streaming.fused import FusedPrefixOp
 from repro.streaming.multiquery import (broadcast_windows, fan_out_tails,
                                         flush_shared)
 from repro.streaming.operators import (
@@ -186,14 +187,31 @@ class _GroupExec:
             n = int(batch["frames"].shape[0])
             if isinstance(op, MLLMExtractOp) and n > 0:
                 variant = op.begin_extract(n)
+                # a fused prefix immediately upstream computed the gate
+                # signature in its single pass — hand it to the server
+                # (and strip it: it must not ride into apply_preds)
+                sig = batch.pop("_sig", None)
                 req = self.server.submit(variant, batch["frames"],
-                                         feed=self.feed)
+                                         feed=self.feed, sig=sig)
                 return _Pending(op_index=i, batch=batch, req=req, n=n)
             if obs.enabled:
                 t0 = obs.now()
                 batch = broadcast_windows(op.process(batch), self.windows)
-                obs.tracer.span(f"prefix:{op.name}", "prefix", t0,
+                fused = isinstance(op, FusedPrefixOp)
+                obs.tracer.span("prefix:fused" if fused
+                                else f"prefix:{op.name}", "prefix", t0,
                                 obs.now(), track=self._track, n=n)
+                if fused:
+                    # per-stage attribution: the chain collapsed to one
+                    # dispatch, so surviving-row counts per fused stage
+                    # are the remaining stage-level signal
+                    for sname, rows_in, rows_out in op.last_stage_counts:
+                        obs.metrics.set_gauge(
+                            f"prefix_fused/{self.feed}/{sname}/in",
+                            rows_in)
+                        obs.metrics.set_gauge(
+                            f"prefix_fused/{self.feed}/{sname}/out",
+                            rows_out)
             else:
                 batch = broadcast_windows(op.process(batch), self.windows)
             i += 1

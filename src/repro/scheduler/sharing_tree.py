@@ -74,6 +74,11 @@ OP_COST_US: Dict[str, float] = {
     "FusedPreprocessOp": 40.0,
     "CheapColorFilterOp": 60.0,
     "DetectOp": 400.0,
+    # one device pass for a whole fusable prefix — cheaper than the sum
+    # of its members' dispatches but above any single cheap stage; the
+    # physical phase always calibrates before fusing, so this static
+    # fallback only prices plans fused outside the optimizer
+    "FusedPrefixOp": 90.0,
     "FilterOp": 5.0,
     "WindowAggOp": 10.0,
 }
@@ -189,7 +194,16 @@ def extract_bucket(prefix: List[Op],
     chains return None (no coalescing credit — the conservative score,
     never rewarding a share the server might not realize)."""
     c, h, w = frame_shape
+    ops = []
     for op in prefix:
+        # a fused prefix transforms frames exactly like its members:
+        # expand it so the bucket shape math stays in one place
+        stage_ops = getattr(op, "stage_ops", None)
+        if stage_ops is not None:
+            ops.extend(stage_ops)
+        else:
+            ops.append(op)
+    for op in ops:
         if isinstance(op, MLLMExtractOp):
             if op.model == "adaptive":
                 return None

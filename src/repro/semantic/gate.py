@@ -121,16 +121,26 @@ class SemanticGate:
 
     # ------------------------------------------------------------------
     def admit(self, feed: str, variant: str,
-              frames: np.ndarray) -> Admission:
+              frames: np.ndarray, sig=None) -> Admission:
         """Classify one batch; the caller runs the model only over
-        ``admission.model_frames(frames)`` and binds the output."""
+        ``admission.model_frames(frames)`` and binds the output.
+
+        ``sig``, when given, is a precomputed ``(feats, emb)`` pair for
+        exactly these frames — the fused prefix path
+        (``FusedPrefixOp``) produces the signature in the same device
+        pass as the rest of the chain, so the gate skips its own jitted
+        call.  The fused signature is bitwise-identical to
+        ``self.signature.features(frames)`` (both derive from
+        ``signature_layout``), so cache buckets and distances agree
+        regardless of which path computed it."""
         assert self.active
         obs = self.obs
         t0 = obs.now() if obs.enabled else 0
         n = int(frames.shape[0])
         adm = Admission(feed=feed, variant=variant, n=n, gate=self,
                         mismatch_min_tasks=self.config.mismatch_min_tasks)
-        feats, emb = self.signature.features(frames)
+        feats, emb = sig if sig is not None \
+            else self.signature.features(frames)
         shape = tuple(frames.shape[1:])
         every = self.config.revalidate_every
         with self._lock:

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.fused_prefix.ref import project_rowwise
 from repro.streaming.operators import _bucket_pad
 
 #: dimensionality of the random-projection embedding (bucket keys are
@@ -50,6 +51,24 @@ def _grid(n: int, target: int) -> int:
     return 1
 
 
+def signature_layout(shape: Tuple[int, int, int],
+                     grid: Tuple[int, int] = (8, 16)
+                     ) -> Tuple[int, int, int, np.ndarray]:
+    """The pooling grid and projection matrix for one frame shape —
+    ``(gy, gx, d, proj)``.  This is the single source of truth shared by
+    ``TemporalSignature`` and the fused-prefix path
+    (``kernels/fused_prefix``): both must produce bitwise-identical
+    signatures for the gate's cache buckets to agree, so neither may
+    derive the layout independently."""
+    c, h, w = shape
+    gy, gx = _grid(h, grid[0]), _grid(w, grid[1])
+    d = c * gy * gx
+    rng = np.random.RandomState(_PROJ_SEED)
+    proj = rng.standard_normal((d, EMB_DIM)).astype(np.float32)
+    proj /= np.sqrt(d)
+    return gy, gx, d, proj
+
+
 class TemporalSignature:
     """Batched signature extractor with one compiled program per
     (frame shape, dtype, padded batch size)."""
@@ -65,11 +84,7 @@ class TemporalSignature:
         if key in self._fns:
             return self._fns[key]
         c, h, w = shape
-        gy, gx = _grid(h, self.grid[0]), _grid(w, self.grid[1])
-        d = c * gy * gx
-        rng = np.random.RandomState(_PROJ_SEED)
-        proj = rng.standard_normal((d, EMB_DIM)).astype(np.float32)
-        proj /= np.sqrt(d)
+        gy, gx, d, proj = signature_layout(shape, self.grid)
         self._projs[key] = proj
 
         @jax.jit
@@ -81,7 +96,10 @@ class TemporalSignature:
                           (x / 255.0 - 0.5) / 0.25, x)
             p = x.reshape(x.shape[0], c, gy, h // gy, gx, w // gx)
             feats = p.mean(axis=(3, 5)).reshape(x.shape[0], d)
-            emb = feats @ jnp.asarray(proj)
+            # row-deterministic projection shared with kernels/fused_prefix
+            # — a gemm here would round differently per padded batch size,
+            # breaking the fused path's bitwise signature hand-off
+            emb = project_rowwise(feats, jnp.asarray(proj))
             return feats, emb
 
         self._fns[key] = fn

@@ -191,16 +191,21 @@ class SkipOp(Op):
     def open(self, ctx: OpContext) -> None:
         self._diff = functools.partial(frame_diff, regions=self.regions)
 
-    def process(self, batch: Batch) -> Batch:
-        frames = batch["frames"]
-        n = frames.shape[0]
-        if n == 0:
-            return batch
-        keep = np.ones(n, bool)
-        # one batched kernel call: frame i vs frame i-1 (first vs carry)
+    def prev_frames(self, frames: np.ndarray) -> np.ndarray:
+        """The per-row predecessors one batched diff call compares
+        against: frame i vs frame i-1, the first vs the carried state."""
         prev0 = self._prev if self._prev is not None else frames[0]
-        prevs = np.concatenate([prev0[None], frames[:-1]], axis=0)
-        d = np.asarray(self._diff(frames, prevs))      # (n, ry, rx)
+        return np.concatenate([prev0[None], frames[:-1]], axis=0)
+
+    def keep_from_diff(self, frames: np.ndarray,
+                       d: np.ndarray) -> np.ndarray:
+        """Advance the skip state over one batch given its (n, ry, rx)
+        diff grid and return the keep mask.  Split from ``process`` so
+        ``FusedPrefixOp`` can feed the diff its own single device pass
+        produced — the host-side stateful loop stays the one
+        implementation either way."""
+        n = frames.shape[0]
+        keep = np.ones(n, bool)
         if self.roi is not None:
             y0, x0, hh, ww = self.roi
             ry, rx = self.regions
@@ -220,7 +225,16 @@ class SkipOp(Op):
                 keep[i] = False
                 self._skip_left = self.amount
         self._prev = frames[-1]
-        return _mask_batch(batch, keep)
+        return keep
+
+    def process(self, batch: Batch) -> Batch:
+        frames = batch["frames"]
+        n = frames.shape[0]
+        if n == 0:
+            return batch
+        # one batched kernel call: frame i vs frame i-1 (first vs carry)
+        d = np.asarray(self._diff(frames, self.prev_frames(frames)))
+        return _mask_batch(batch, self.keep_from_diff(frames, d))
 
     def reset(self):
         self._prev = None
@@ -480,6 +494,13 @@ class MLLMExtractOp(Op):
         return self._runs[variant](jnp.asarray(frames))
 
     def process(self, batch: Batch) -> Batch:
+        # a FusedPrefixOp immediately upstream computed the gate
+        # signature in its single device pass; consume it here so it
+        # never leaks past the extract into tails or sink records
+        sig = None
+        if "_sig" in batch:
+            batch = dict(batch)        # copy-on-write, like every op
+            sig = batch.pop("_sig")
         n = batch["frames"].shape[0]
         if n == 0:
             return batch
@@ -489,7 +510,8 @@ class MLLMExtractOp(Op):
             # cache-consult stage: near-duplicates of a recent keyframe
             # are answered from the semantic cache; only novel frames and
             # revalidation hits pay the forward
-            adm = gate.admit(self._gate_feed, variant, batch["frames"])
+            adm = gate.admit(self._gate_feed, variant, batch["frames"],
+                             sig=sig)
             if adm.n_model:
                 mf = adm.model_frames(batch["frames"])
                 preds = self._forward(variant, mf, adm.n_model)

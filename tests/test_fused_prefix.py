@@ -1,0 +1,265 @@
+"""Fused prefix execution: bitwise identity, planner integration, and the
+calibrated physical-phase decision.
+
+The load-bearing claim is the first pair of tests: a ``FusedPrefixOp`` —
+one device pass per micro-batch — is *bitwise* interchangeable with the
+unfused operator chain it replaces (kept rows, transformed frames, and
+the semantic-gate signature), across random chains, shapes, dtypes, and
+micro-batch sizes, including Skip's stateful carry across batches.  The
+randomized sweep always runs; the hypothesis property (shrinking,
+adversarial draws) additionally runs where hypothesis is installed.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.streaming.fused import FusedPrefixOp, fusable_segment
+from repro.streaming.operators import (
+    CheapColorFilterOp,
+    CropOp,
+    DetectOp,
+    FusedPreprocessOp,
+    MLLMExtractOp,
+    SkipOp,
+    SourceOp,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+#: frame geometries the random chains draw from
+_HWS = [(128, 256), (64, 128)]
+_ROIS = {(128, 256): [None, (0, 0, 64, 128), (32, 96, 32, 64)],
+         (64, 128): [None, (0, 0, 32, 64)]}
+_CROPS = {(128, 256): [(0, 0, 128, 256), (64, 0, 64, 256),
+                       (32, 128, 64, 128)],
+          (64, 128): [(0, 0, 64, 128), (32, 0, 32, 128), (16, 64, 32, 64)]}
+
+
+def _draw_chain(pick, hw):
+    """A random fusable chain (>= 2 ops) for (3, H, W) frames; ``pick``
+    chooses one element of a list (hypothesis draw or seeded rng)."""
+    ops = []
+    if pick([False, True]):
+        ops.append(SkipOp())
+    for _ in range(pick([0, 1, 2])):
+        ops.append(CheapColorFilterOp(color=pick(["red", "blue"]),
+                                      min_frac=pick([0.0, 0.001, 0.01]),
+                                      roi=pick(_ROIS[hw])))
+    if pick([False, True]):
+        ops.append(CropOp(region=pick(_CROPS[hw])))
+    if pick([False, True]):
+        ch, cw = ops[-1].region[2:] if ops and isinstance(ops[-1], CropOp) \
+            else hw
+        crop = pick([(0, 0, ch, cw), (ch // 2, 0, ch // 2, cw),
+                     (ch // 4, cw // 4, ch // 2, cw // 2)])
+        factor = pick([f for f in (1, 2, 4)
+                       if crop[2] % f == 0 and crop[3] % f == 0])
+        ops.append(FusedPreprocessOp(crop=crop, factor=factor,
+                                     grey=pick([False, True])))
+    if pick([False, True]):
+        ops.append(DetectOp(threshold=pick([0.0, 0.3, 0.5, 0.9])))
+    if len(ops) < 2:
+        ops = [SkipOp(), CropOp(region=_CROPS[hw][1])] + ops
+    assert fusable_segment(ops)
+    return ops
+
+
+def _run_unfused(ops, batches):
+    """The runtime's chain walk: stop a batch early once it is empty."""
+    outs = []
+    for fr in batches:
+        b = {"frames": fr, "idx": np.arange(fr.shape[0])}
+        for o in ops:
+            if b["frames"].shape[0] == 0:
+                break
+            b = o.process(b)
+        outs.append(b)
+    return outs
+
+
+def _check_fused_equals_unfused(stream_ctx, pick, hw, dtype, seed):
+    """One example: random chain + 3 stateful micro-batches, fused vs
+    unfused bitwise on rows, frames, and the gate signature."""
+    from repro.semantic.signature import TemporalSignature
+
+    ops = _draw_chain(pick, hw)
+    rng = np.random.RandomState(seed)
+    batches = []
+    for _ in range(3):                         # skip state carries across
+        n = pick(list(range(1, 13)))
+        fr = rng.randint(0, 256, (n, 3) + hw, np.uint8)
+        for i in range(1, n):                  # repeated frames: Skip drops
+            if pick([False, True]):
+                fr[i] = fr[i - 1]
+        batches.append(fr.astype(dtype))
+
+    unfused = [copy.deepcopy(o) for o in ops]
+    for o in unfused:
+        o.open(stream_ctx)
+        o.reset()
+    fused = FusedPrefixOp(stage_ops=tuple(copy.deepcopy(o) for o in ops),
+                          sig=True)
+    fused.open(stream_ctx)
+    fused.reset()
+
+    sigfn = TemporalSignature()
+    for bu, fr in zip(_run_unfused(unfused, batches), batches):
+        bf = fused.process({"frames": fr, "idx": np.arange(fr.shape[0])})
+        feats, emb = bf.pop("_sig")
+        assert np.array_equal(bf["idx"], bu["idx"])
+        if bu["idx"].shape[0] == 0:
+            # the runtime stops an emptied batch mid-chain, so the
+            # unfused frames may still be untransformed; nothing
+            # downstream ever observes them — only emptiness matters
+            assert feats.shape[0] == 0 and emb.shape[0] == 0
+            continue
+        assert bf["frames"].dtype == bu["frames"].dtype
+        assert np.array_equal(bf["frames"], bu["frames"])
+        # the fused signature (computed on the full batch, then masked)
+        # is bitwise the gate's own signature of the surviving frames
+        ref_feats, ref_emb = sigfn.features(bu["frames"])
+        assert np.array_equal(feats, np.asarray(ref_feats))
+        assert np.array_equal(emb, np.asarray(ref_emb))
+        # per-stage attribution covers every member op, monotone rows
+        assert [s[0] for s in fused.last_stage_counts] == \
+            [o.name for o in ops]
+        rows = [fr.shape[0]] + [s[2] for s in fused.last_stage_counts]
+        assert all(a >= b for a, b in zip(rows, rows[1:]))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(6))
+def test_fused_prefix_bitwise_equals_unfused_chain(stream_ctx, seed):
+    rng = np.random.RandomState(1000 + seed)
+    pick = lambda opts: opts[rng.randint(len(opts))]  # noqa: E731
+    hw = _HWS[seed % len(_HWS)]
+    dtype = [np.uint8, np.float32][seed % 2]
+    _check_fused_equals_unfused(stream_ctx, pick, hw, dtype, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @given(data=st.data())
+    @settings(max_examples=10, deadline=None)
+    def test_fused_prefix_bitwise_property(stream_ctx, data):
+        pick = lambda opts: data.draw(st.sampled_from(opts))  # noqa: E731
+        hw = data.draw(st.sampled_from(_HWS))
+        dtype = data.draw(st.sampled_from([np.uint8, np.float32]))
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        _check_fused_equals_unfused(stream_ctx, pick, hw, dtype, seed)
+
+
+@pytest.mark.slow
+def test_fused_runtime_matches_unfused_bitwise_with_spans(stream_ctx):
+    """MultiStreamRuntime drives a fused plan to the same outputs as the
+    unfused plan, emitting ``prefix:fused`` spans + per-stage gauges."""
+    import dataclasses
+
+    from repro.data import TollBoothStream
+    from repro.obs import Observability
+    from repro.queries import get_query
+    from repro.scheduler import Feed, MultiStreamRuntime
+
+    def prefix_ops():
+        return [SkipOp(), CheapColorFilterOp(color="red", min_frac=0.0),
+                FusedPreprocessOp(crop=(64, 0, 64, 256), factor=2),
+                DetectOp(threshold=0.1)]
+
+    def plan(fuse):
+        p = get_query("Q2").naive_plan()
+        ops = prefix_ops()
+        if fuse:
+            ops = [FusedPrefixOp(stage_ops=tuple(ops), sig=True)]
+        for op in ops:          # each lands immediately before the extract
+            p.insert_before(MLLMExtractOp, op)
+        return p
+
+    def run(fuse, obs=None):
+        ctx = stream_ctx if obs is None \
+            else dataclasses.replace(stream_ctx, obs=obs)
+        ms = MultiStreamRuntime(
+            [Feed("tb", TollBoothStream(seed=3, car_rate=0.2),
+                  [plan(fuse)])],
+            ctx, micro_batch=16)
+        return ms.run(48)
+
+    obs = Observability(slo_target_ms=10_000.0)
+    base = run(False)
+    fused = run(True, obs=obs)
+    q = "Q2"
+    assert fused.feeds["tb"].per_query[q].outputs == \
+        base.feeds["tb"].per_query[q].outputs
+    assert fused.feeds["tb"].per_query[q].window_results == \
+        base.feeds["tb"].per_query[q].window_results
+    # one prefix:fused span per micro-batch instead of one per member op
+    names = [e["name"] for e in obs.tracer.events() if e["cat"] == "prefix"]
+    assert "prefix:fused" in names
+    member = {f"prefix:{o.name}" for o in prefix_ops()}
+    assert not member & set(names)
+    # per-stage attribution gauges cover all four member stages (op
+    # names may themselves contain '/', so strip the fixed ends)
+    stages = {k[len("prefix_fused/tb/"):].rsplit("/", 1)[0]
+              for k in obs.metrics.snapshot()["gauges"]
+              if k.startswith("prefix_fused/tb/")}
+    assert stages == {o.name for o in prefix_ops()}
+
+
+@pytest.mark.slow
+def test_physical_refuses_fusion_when_calibration_loses(stream_ctx):
+    """On a sparse stream Skip kills nearly every row up front, so the
+    unfused chain is far cheaper than one full-batch fused pass — the
+    physical phase must measure that and keep the plan unfused."""
+    from repro.core.costs import CostCatalog
+    from repro.core.physical import PhysicalOptimizer
+    from repro.data import TollBoothStream
+    from repro.queries import get_query
+
+    plan = get_query("Q2").naive_plan()
+    for op in [SkipOp(), CheapColorFilterOp(color="red"),
+               FusedPreprocessOp(crop=(64, 0, 64, 256), factor=2),
+               DetectOp(threshold=0.5)]:
+        plan.insert_before(MLLMExtractOp, op)
+    before = [o.name for o in plan.ops]
+    # default car_rate=0.009: almost every frame is static background
+    sample = TollBoothStream(seed=404).batch(64)[0]
+    opt = PhysicalOptimizer(stream_ctx)
+    report = {"decisions": []}
+    opt._fuse_prefix(plan, report, CostCatalog(), None, sample)
+    info = report["fused_prefix"]
+    assert info["fused"] is False
+    assert info["fused_us"] > info["unfused_us"]
+    assert [o.name for o in plan.ops] == before
+    assert not any(isinstance(o, FusedPrefixOp) for o in plan.ops)
+
+
+def test_fusable_segment_rules():
+    ok = [SkipOp(), CheapColorFilterOp(color="red"),
+          FusedPreprocessOp(crop=(0, 0, 128, 256), factor=2),
+          DetectOp()]
+    assert fusable_segment(ok)
+    assert not fusable_segment([])
+    assert not fusable_segment([CropOp(region=(0, 0, 64, 256)), SkipOp()])
+    assert not fusable_segment([DetectOp(), CropOp(region=(0, 0, 64, 256))])
+    assert not fusable_segment([SkipOp(), SourceOp()])
+
+
+def test_unfuse_roundtrip_and_bucket_expansion():
+    from repro.scheduler.sharing_tree import extract_bucket
+
+    ops = [SkipOp(), CropOp(region=(64, 0, 64, 256)),
+           FusedPreprocessOp(crop=(0, 0, 64, 256), factor=2), DetectOp()]
+    fop = FusedPrefixOp(stage_ops=tuple(ops), sig=True)
+    # unfuse() rebuilds equivalent fresh descriptors
+    assert [o.signature() for o in fop.unfuse()] == \
+        [o.signature() for o in ops]
+    # the op's own signature is hashable (planner share keys, dicts)
+    hash(fop.signature())
+    # the server coalescing bucket sees through the fusion
+    ex = MLLMExtractOp(tasks=("color",), model="small")
+    assert extract_bucket([fop, ex]) == extract_bucket(list(ops) + [ex])
+    assert extract_bucket([fop, ex]) == ("small", (3, 32, 128))

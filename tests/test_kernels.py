@@ -18,6 +18,9 @@ from repro.kernels.fused_preprocess.ops import fused_preprocess
 from repro.kernels.fused_preprocess.ref import fused_preprocess_ref
 from repro.kernels.frame_diff.ops import frame_diff
 from repro.kernels.frame_diff.ref import frame_diff_ref
+from repro.kernels.fused_prefix.ops import fused_prefix
+from repro.kernels.fused_prefix.ref import fused_prefix_ref
+from repro.kernels.fused_prefix.kernel import out_frame_shape
 
 
 def rnd(i, shape, dtype=jnp.float32, scale=1.0):
@@ -205,3 +208,48 @@ def test_frame_diff_sweep(regions):
     # identical frames diff to zero
     z = frame_diff(f, f, regions=regions, interpret=True)
     np.testing.assert_allclose(z, np.zeros_like(z), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# fused prefix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    # the canonical optimized-plan prefix: skip diff + color filter +
+    # crop/downscale/normalize
+    (("diff", (4, 8)), ("color", (190., 40., 40.), None),
+     ("preprocess", (64, 0, 64, 256), 2, False)),
+    # crop then greyscale preprocess (grey re-expansion inlined)
+    (("diff", (4, 4)), ("crop", (32, 0, 64, 256)),
+     ("preprocess", (0, 0, 64, 256), 2, True)),
+    # two color filters, one ROI-restricted; no transform stages
+    (("color", (190., 40., 40.), (0, 0, 64, 128)),
+     ("color", (40., 40., 190.), None)),
+    # transform-only chain (no diff, no filters)
+    (("crop", (0, 64, 128, 128)), ("preprocess", (0, 0, 128, 128), 4, False)),
+])
+def test_fused_prefix_sweep(spec):
+    from repro.semantic.signature import signature_layout
+
+    b = 4
+    f = jax.random.randint(jax.random.PRNGKey(2), (b, 3, 128, 256), 0, 256,
+                           jnp.uint8)
+    p = jax.random.randint(jax.random.PRNGKey(3), (b, 3, 128, 256), 0, 256,
+                           jnp.uint8)
+    gy, gx, _, proj = signature_layout(out_frame_shape(spec, (3, 128, 256)))
+    spec = spec + (("signature", (gy, gx)),)
+    has_diff = any(s[0] == "diff" for s in spec)
+    prevs = p if has_diff else None
+    out = fused_prefix(f, prevs, jnp.asarray(proj), spec=spec,
+                       interpret=True)
+    ref = fused_prefix_ref(f, prevs, jnp.asarray(proj), spec=spec)
+    for name, o, r in zip(("d", "fracs", "x", "feats", "emb"), out, ref):
+        if r is None:
+            assert o is None
+        elif name == "fracs":
+            assert len(o) == len(r)
+            for a, bb in zip(o, r):
+                np.testing.assert_allclose(a, bb, atol=1e-5, rtol=1e-5)
+        else:
+            assert o.shape == r.shape
+            np.testing.assert_allclose(o, r, atol=1e-5, rtol=1e-5)
