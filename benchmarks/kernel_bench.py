@@ -9,7 +9,7 @@ Output: ``name,us_per_call,derived`` CSV rows.
 from __future__ import annotations
 
 import time
-from typing import Callable, List
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +26,9 @@ def _time(fn: Callable, *args, reps: int = 10) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run_all() -> List[str]:
-    rows = []
+def run_all() -> Iterator[str]:
+    """Yield rows one at a time — the driver persists each section's
+    partial output even when a later benchmark in the section raises."""
     # fused preprocess: the streaming hot path
     from repro.kernels.fused_preprocess.ops import fused_preprocess
 
@@ -36,14 +37,14 @@ def run_all() -> List[str]:
     us = _time(lambda f: fused_preprocess(f, crop=(64, 0, 64, 256), factor=2),
                frames)
     mb = 16 * 3 * 128 * 256 / 2**20
-    rows.append(f"fused_preprocess_16f,{us:.1f},{mb/(us/1e6)/1024:.2f}GiB/s")
+    yield f"fused_preprocess_16f,{us:.1f},{mb/(us/1e6)/1024:.2f}GiB/s"
 
     # frame diff (skip operator)
     from repro.kernels.frame_diff.ops import frame_diff
 
     prev = jnp.asarray(np.random.randint(0, 255, (16, 3, 128, 256), np.uint8))
     us = _time(lambda a, b: frame_diff(a, b, regions=(4, 8)), frames, prev)
-    rows.append(f"frame_diff_16f,{us:.1f},{2*mb/(us/1e6)/1024:.2f}GiB/s")
+    yield f"frame_diff_16f,{us:.1f},{2*mb/(us/1e6)/1024:.2f}GiB/s"
 
     # fused prefix: diff + color fraction + preprocess + gate signature in
     # one pass (the per-micro-batch chain FusedPrefixOp dispatches once)
@@ -57,7 +58,7 @@ def run_all() -> List[str]:
     spec = spec + (("signature", (gy, gx)),)
     pj = jnp.asarray(proj)
     us = _time(lambda a, b: fused_prefix(a, b, pj, spec=spec), frames, prev)
-    rows.append(f"fused_prefix_16f,{us:.1f},{2*mb/(us/1e6)/1024:.2f}GiB/s")
+    yield f"fused_prefix_16f,{us:.1f},{2*mb/(us/1e6)/1024:.2f}GiB/s"
 
     # flash attention fallback (prefill path)
     from repro.kernels.flash_attention.ops import flash_attention
@@ -66,7 +67,7 @@ def run_all() -> List[str]:
     k = jnp.asarray(np.random.randn(1, 1024, 2, 64), jnp.float32)
     us = _time(lambda q, k: flash_attention(q, k, k, causal=True), q, k)
     fl = 2 * 2 * 1024 * 1024 * 8 * 64 / 2  # causal half
-    rows.append(f"flash_attention_1k,{us:.1f},{fl/(us/1e6)/1e9:.2f}GFLOP/s")
+    yield f"flash_attention_1k,{us:.1f},{fl/(us/1e6)/1e9:.2f}GFLOP/s"
 
     # int8 matmul fallback
     from repro.kernels.int8_matmul.ref import quantize_colwise
@@ -77,7 +78,7 @@ def run_all() -> List[str]:
     wq, sw = quantize_colwise(w)
     us = _time(lambda x: matmul_int8_dynamic(x, wq, sw), x)
     fl = 2 * 256 * 512 * 512
-    rows.append(f"int8_matmul_256x512x512,{us:.1f},{fl/(us/1e6)/1e9:.2f}GOP/s")
+    yield f"int8_matmul_256x512x512,{us:.1f},{fl/(us/1e6)/1e9:.2f}GOP/s"
 
     # SSD scan
     from repro.kernels.ssd_scan.ops import ssd
@@ -90,5 +91,4 @@ def run_all() -> List[str]:
     cm = jnp.asarray(np.random.randn(B, L, G, N) * 0.3, jnp.float32)
     d = jnp.ones((H,))
     us = _time(lambda x: ssd(x, dt, a, bm, cm, d, chunk=128), xs)
-    rows.append(f"ssd_scan_b2l512,{us:.1f},chunked")
-    return rows
+    yield f"ssd_scan_b2l512,{us:.1f},chunked"

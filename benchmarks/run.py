@@ -89,9 +89,9 @@ def main() -> None:
     ap.add_argument("--sections", default=None,
                     help="comma list of top-level sections to run "
                          "(kernels,serving,samsara,fig_semantic,"
-                         "fig_fused — the last two are figures promoted "
-                         "to their own sections, each written to "
-                         "BENCH_<name>.json); default: all")
+                         "fig_fused,fig_chaos — the last three are "
+                         "figures promoted to their own sections, each "
+                         "written to BENCH_<name>.json); default: all")
     ap.add_argument("--samsara-figs", default=None,
                     help="comma list of Saṃsāra figures (fig1b,fig5,"
                          "table2,fig_mq,fig_ms,fig_pipeline,fig_fleet,"
@@ -107,7 +107,8 @@ def main() -> None:
     args = ap.parse_args()
 
     wanted = args.sections.split(",") if args.sections else None
-    known = {"kernels", "serving", "samsara", "fig_semantic", "fig_fused"}
+    known = {"kernels", "serving", "samsara", "fig_semantic", "fig_fused",
+             "fig_chaos"}
     assert wanted is None or set(wanted) <= known, \
         f"unknown sections {sorted(set(wanted) - known)} (known: {sorted(known)})"
 
@@ -128,14 +129,14 @@ def main() -> None:
         figs = args.samsara_figs.split(",") if args.samsara_figs else None
         # a figure also requested as its own top-level section must not
         # run twice when the samsara default list would include it
-        exclude = [s for s in ("fig_semantic", "fig_fused")
+        exclude = [s for s in ("fig_semantic", "fig_fused", "fig_chaos")
                    if wanted is not None and s in wanted] or None
         sections.append(("samsara",
                          lambda: samsara_bench.run_all(
                              quick=args.quick,
                              quick_models=args.quick_models,
                              sections=figs, exclude=exclude)))
-    for own in ("fig_semantic", "fig_fused"):
+    for own in ("fig_semantic", "fig_fused", "fig_chaos"):
         if want(own) and wanted is not None:
             # its own top-level section (not just a samsara figure) so
             # these rows land in a dedicated BENCH_<name>.json next to

@@ -71,7 +71,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -908,6 +908,109 @@ def fig_fused(ctx, cache, frames: int = MS_FRAMES) -> List[str]:
     return rows
 
 
+#: the feed sacrificed to the fault injector in ``fig_chaos`` (one of
+#: the four MS_FEEDS; the other three are the healthy fleet)
+CHAOS_SICK = "tb1"
+CHAOS_SEED = 11
+
+
+def _chaos_rules(regime: str):
+    """The three failure regimes of fig_chaos, as fault schedules.
+
+    ``crash``: the sick feed's transport goes dead (corrupt deliveries
+    past any retry budget) — the breaker must trip and quarantine it.
+    ``slow``: every sick-feed forward completes late (injected device
+    latency) — absorbed, bitwise.  ``flaky``: transient forward errors
+    that clear on retry plus periodic source stalls — absorbed, bitwise,
+    paid for in retries."""
+    from repro.faults import FaultRule
+
+    if regime == "crash":
+        return [FaultRule(site="source", kind="corrupt", feed=CHAOS_SICK,
+                          start=1, every=1, param=99)]
+    if regime == "slow":
+        return [FaultRule(site="forward", kind="latency", feed=CHAOS_SICK,
+                          every=1, param=2)]
+    assert regime == "flaky"
+    return [FaultRule(site="forward", kind="error", feed=CHAOS_SICK,
+                      every=3, param=1),
+            FaultRule(site="source", kind="stall", feed=CHAOS_SICK,
+                      start=2, every=4)]
+
+
+def fig_chaos(ctx, cache, frames: int = MS_FRAMES) -> List[str]:
+    """Fleet serving with 1-of-4 feeds failing, vs fault-free.
+
+    Claims measured, per regime (crash / slow / flaky): the three
+    healthy feeds keep their outputs bitwise identical to the fault-free
+    run at ≥ 0.9× its throughput (``healthy_fps_ratio`` = fault-free
+    wall / faulted wall over the same healthy workload); *zero* wrong
+    results — every served answer matches the fault-free run at its
+    frame index, losses are marked degraded/dropped, and served +
+    degraded + dropped exactly partitions the sick feed's frames."""
+    import dataclasses as _dc  # noqa: F401  (parallel to fig_multistream)
+
+    from repro.faults import FaultInjector
+    from repro.scheduler import MultiStreamRuntime
+
+    key = ("MS-chaos", ("chaos", str(frames), str(CHAOS_SEED)))
+    if key in cache:
+        out = cache[key]
+    else:
+        base = MultiStreamRuntime(_ms_feeds(), ctx, micro_batch=16)\
+            .run(frames)
+        base_out = {f: {q: r.outputs
+                        for q, r in base.feeds[f].per_query.items()}
+                    for f in base.feeds}
+        healthy = [n for n, _, _, _ in MS_FEEDS if n != CHAOS_SICK]
+        regimes: Dict[str, Dict] = {}
+        for regime in ("crash", "slow", "flaky"):
+            inj = FaultInjector(_chaos_rules(regime), seed=CHAOS_SEED)
+            res = MultiStreamRuntime(_ms_feeds(), ctx, micro_batch=16,
+                                     faults=inj).run(frames)
+            wrong = 0
+            for f in res.feeds:
+                for q, r in res.feeds[f].per_query.items():
+                    want = {w["idx"]: w for w in base_out[f][q]}
+                    wrong += sum(1 for o in r.outputs
+                                 if want.get(o["idx"]) != o)
+            healthy_exact = all(
+                {q: r.outputs
+                 for q, r in res.feeds[f].per_query.items()} == base_out[f]
+                for f in healthy)
+            sick = res.feeds[CHAOS_SICK]
+            regimes[regime] = {
+                "wall_s": res.wall_s,
+                "healthy_fps_ratio":
+                    base.wall_s / max(res.wall_s, 1e-9),
+                "wrong": wrong, "healthy_exact": healthy_exact,
+                "served": sick.served, "degraded": sick.degraded,
+                "dropped": sick.dropped,
+                "availability": sick.served / max(frames, 1),
+                "trips": sick.breaker.get("trips", 0),
+                "recoveries": sick.breaker.get("recoveries", 0),
+                "faults_fired": len(inj.log),
+            }
+        out = {"base_wall_s": base.wall_s, "base_fps": base.fps,
+               "regimes": regimes}
+        cache[key] = out
+    rows = [f"fig_chaos,fault_free,{out['base_fps']:.2f},"
+            f"wall_s={out['base_wall_s']:.2f};sick_feed={CHAOS_SICK}"]
+    for regime, r in out["regimes"].items():
+        ok = r["healthy_fps_ratio"] >= 0.9 and r["wrong"] == 0 \
+            and r["healthy_exact"] \
+            and r["served"] + r["degraded"] + r["dropped"] == frames
+        rows.append(
+            f"fig_chaos,{regime},{r['healthy_fps_ratio']:.2f},"
+            f"availability={r['availability']:.2f};"
+            f"served={r['served']};degraded={r['degraded']};"
+            f"dropped={r['dropped']};wrong={r['wrong']};"
+            f"healthy_exact={r['healthy_exact']};trips={r['trips']};"
+            f"recoveries={r['recoveries']};"
+            f"faults_fired={r['faults_fired']};target_met={ok}")
+    return rows
+
+
 CACHE_PATH = os.path.join(REPORT_DIR, "samsara_bench.json")
 
 #: bump when runtime semantics change measured results (v2: end-of-stream
@@ -917,8 +1020,9 @@ CACHE_PATH = os.path.join(REPORT_DIR, "samsara_bench.json")
 #: v5: fig_ms/fig_pipeline rows gain latency-percentile columns whose
 #: fields a v4 cache entry lacks; v6: fused-prefix execution — one device
 #: pass per surviving micro-batch — changes prefix dispatch behavior and
-#: adds fig_fused) — a stale cache would silently mix semantics
-CACHE_VERSION = 6
+#: adds fig_fused; v7: fault-tolerant serving adds fig_chaos and the
+#: chaos accounting fields) — a stale cache would silently mix semantics
+CACHE_VERSION = 7
 
 
 def _load_cache() -> Dict:
@@ -944,7 +1048,7 @@ MS_QUICK_FRAMES = 48
 def run_all(quick: bool = False, use_cache: bool = True,
             quick_models: bool = False,
             sections: Optional[List[str]] = None,
-            exclude: Optional[List[str]] = None) -> List[str]:
+            exclude: Optional[List[str]] = None) -> Iterator[str]:
     """Run the Saṃsāra figures.
 
     ``sections`` picks figures by name (None: fig1b under ``quick``, all
@@ -974,6 +1078,7 @@ def run_all(quick: bool = False, use_cache: bool = True,
         "fig_fleet": fig_fleet,
         "fig_semantic": lambda c, k: fig_semantic(c, k, frames=ms_frames),
         "fig_fused": lambda c, k: fig_fused(c, k, frames=ms_frames),
+        "fig_chaos": lambda c, k: fig_chaos(c, k, frames=ms_frames),
     }
     if sections is None:
         sections = ["fig1b"] if quick else list(figs)
@@ -981,13 +1086,17 @@ def run_all(quick: bool = False, use_cache: bool = True,
             sections = [s for s in sections if s not in exclude]
     unknown = [s for s in sections if s not in figs]
     assert not unknown, f"unknown samsara sections {unknown}"
-    rows: List[str] = []
-    for name in sections:
-        rows += figs[name](ctx, cache)
-    if use_cache:
-        with open(CACHE_PATH, "w") as f:
-            payload = {f"{q}|{','.join(p)}": r
-                       for (q, p), r in cache.items()}
-            payload["_version"] = CACHE_VERSION
-            json.dump(payload, f, indent=1)
-    return rows
+    # a generator with the cache save in ``finally``: the driver gets
+    # every completed figure's rows even when a later figure raises, and
+    # the result cache still lands on disk either way
+    try:
+        for name in sections:
+            for row in figs[name](ctx, cache):
+                yield row
+    finally:
+        if use_cache:
+            with open(CACHE_PATH, "w") as f:
+                payload = {f"{q}|{','.join(p)}": r
+                           for (q, p), r in cache.items()}
+                payload["_version"] = CACHE_VERSION
+                json.dump(payload, f, indent=1)

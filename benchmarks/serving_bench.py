@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -13,8 +13,9 @@ from repro.models import LM, materialize
 from repro.serving import Request, ServingEngine
 
 
-def run_all() -> List[str]:
-    rows = []
+def run_all() -> Iterator[str]:
+    """Yield rows as they complete (partial-output-on-failure contract
+    of the benchmark driver)."""
     cfg = smoke_config("chatglm3-6b")
     lm = LM(cfg, tp=1)
     params = materialize(lm.spec(), jax.random.PRNGKey(0), jnp.float32)
@@ -33,7 +34,7 @@ def run_all() -> List[str]:
     done = eng1.run(mk_reqs(6))
     seq_s = time.perf_counter() - t0
     tok = sum(len(r.output) for r in done)
-    rows.append(f"serve_sequential_6req,{seq_s*1e6/tok:.0f},{tok/seq_s:.1f}tok/s")
+    yield f"serve_sequential_6req,{seq_s*1e6/tok:.0f},{tok/seq_s:.1f}tok/s"
 
     # continuous batching: 4 slots
     eng4 = ServingEngine(cfg, params, max_slots=4, s_max=64, eos_id=-1)
@@ -42,6 +43,5 @@ def run_all() -> List[str]:
     done = eng4.run(mk_reqs(6))
     cb_s = time.perf_counter() - t0
     tok = sum(len(r.output) for r in done)
-    rows.append(f"serve_continuous_6req,{cb_s*1e6/tok:.0f},{tok/cb_s:.1f}tok/s"
-                f";speedup={seq_s/cb_s:.2f}x")
-    return rows
+    yield (f"serve_continuous_6req,{cb_s*1e6/tok:.0f},{tok/cb_s:.1f}tok/s"
+           f";speedup={seq_s/cb_s:.2f}x")

@@ -1,14 +1,17 @@
 #!/usr/bin/env bash
-# Smoke tier: the fast test suite, a quick-mode run of every example, and
-# the quick serving benchmarks (fig_multistream + fig_pipeline +
-# fig_semantic + fig_fused on tiny models — the per-PR perf trajectory,
-# written to reports/benchmarks/).
+# Smoke tier: the fast test suite, a quick-mode run of every example,
+# the deterministic chaos smoke (fault-injection contract tests + the
+# fixed-seed fault-timeline trace check), and the quick serving
+# benchmarks (fig_multistream + fig_pipeline + fig_semantic + fig_fused
+# on tiny models — the per-PR perf trajectory, written to
+# reports/benchmarks/).
 #
 #   scripts/smoke.sh              # everything
 #   scripts/smoke.sh tests        # tests only
 #   scripts/smoke.sh examples     # examples only
 #   scripts/smoke.sh bench        # quick serving benchmarks only
 #   scripts/smoke.sh obs          # observability walkthrough + trace check
+#   scripts/smoke.sh chaos        # fault-injection smoke + fault-timeline check
 #
 # Matches the CI workflow (.github/workflows/ci.yml); keep the two in sync.
 set -euo pipefail
@@ -47,6 +50,30 @@ cats = {e["cat"] for e in evs if e.get("ph") == "X"}
 phases = sorted(cats & set(PHASES))
 assert len(phases) >= 6, f"trace has too few lifecycle phases: {phases}"
 print(f"trace.json OK: {len(evs)} events, phases={phases}")
+EOF
+fi
+
+if [[ "$what" == "all" || "$what" == "chaos" ]]; then
+    # deterministic chaos smoke: the fault-injection contract tests, then
+    # the 4-feed / 9-query workload under a fixed-seed fault schedule
+    # (examples/chaos_serve.py; the "all"-mode examples loop already ran
+    # it and exported reports/chaos_trace.json), and a fault-timeline
+    # sanity check on the exported Perfetto trace
+    echo "=== pytest -m chaos ==="
+    python -m pytest -q -m chaos
+    if [[ "$what" == "chaos" ]]; then
+        echo "=== examples/chaos_serve.py --quick ==="
+        python examples/chaos_serve.py --quick
+    fi
+    echo "=== reports/chaos_trace.json sanity ==="
+    python - <<'EOF'
+import json
+from repro.obs import FAULT_PHASES
+evs = json.load(open("reports/chaos_trace.json"))["traceEvents"]
+cats = {e["cat"] for e in evs if e.get("ph") in ("X", "i", "I")}
+fault = sorted(cats & set(FAULT_PHASES))
+assert len(fault) >= 2, f"chaos trace has no fault timeline: {sorted(cats)}"
+print(f"chaos_trace.json OK: {len(evs)} events, fault categories={fault}")
 EOF
 fi
 

@@ -44,6 +44,12 @@ from repro.obs.tracer import NULL_TRACER, NullTracer, Tracer
 PHASES = ("ingest", "prefix", "gate", "queue", "staging", "dispatch",
           "forward", "resume", "tail")
 
+#: the additional categories the fault-tolerance tier emits (instants,
+#: not lifecycle spans): injected faults and retries, circuit-breaker
+#: trips/probes/recoveries, degraded-mode serving — kept out of PHASES
+#: so a fault-free trace still covers exactly the lifecycle categories
+FAULT_PHASES = ("fault", "retry", "quarantine", "degraded")
+
 
 class Observability:
     """Tracer + metrics + SLO tracker, one handle (see module docs)."""

@@ -58,6 +58,22 @@ class SLOTracker:
         if latency_ms > self.target(feed):
             m.inc(f"slo_violations/{feed}", n)
 
+    def record_degraded(self, feed: str, n: int = 1) -> None:
+        """Account ``n`` frames answered in degraded mode — a stale
+        keyframe answer served while the feed's circuit was open.  They
+        count against availability, not against the latency SLO (a
+        marked-stale answer makes no latency promise)."""
+        if feed not in self._feeds:
+            self._feeds.append(feed)
+        self.metrics.inc(f"frames_degraded/{feed}", n)
+
+    def record_dropped(self, feed: str, n: int = 1) -> None:
+        """Account ``n`` frames dropped during an outage (no stale
+        answer was available) — exact loss accounting."""
+        if feed not in self._feeds:
+            self._feeds.append(feed)
+        self.metrics.inc(f"frames_dropped/{feed}", n)
+
     # -- reporting ------------------------------------------------------
     def feeds(self) -> List[str]:
         return list(self._feeds)
@@ -68,6 +84,9 @@ class SLOTracker:
         stale = m.histogram(f"staleness_ms/{feed}")
         emitted = m.counter(f"frames_emitted/{feed}").value
         viol = m.counter(f"slo_violations/{feed}").value
+        degraded = m.counter(f"frames_degraded/{feed}").value
+        dropped = m.counter(f"frames_dropped/{feed}").value
+        accounted = emitted + degraded + dropped
         return {
             "feed": feed, "frames": emitted,
             "p50_ms": lat.percentile(50), "p95_ms": lat.percentile(95),
@@ -76,6 +95,10 @@ class SLOTracker:
             "stale_p99_ms": stale.percentile(99),
             "target_ms": self.target(feed), "violations": viol,
             "attainment": 1.0 - viol / emitted if emitted else 1.0,
+            # degraded-mode accounting: availability = fully served /
+            # everything the feed had to answer for
+            "degraded": degraded, "dropped": dropped,
+            "availability": emitted / accounted if accounted else 1.0,
         }
 
     def rows(self) -> List[Dict[str, Any]]:
@@ -111,7 +134,8 @@ class SLOTracker:
         prints)."""
         head = (f"{'feed':<12} {'frames':>7} {'p50':>8} {'p95':>8} "
                 f"{'p99':>8} {'stale p50':>10} {'stale p99':>10} "
-                f"{'target':>7} {'viol':>5} {'attain':>7}")
+                f"{'target':>7} {'viol':>5} {'attain':>7} "
+                f"{'degr':>5} {'drop':>5} {'avail':>7}")
         lines = [head, "-" * len(head)]
         for r in self.rows():
             lines.append(
@@ -119,7 +143,9 @@ class SLOTracker:
                 f"{r['p50_ms']:>7.1f}ms {r['p95_ms']:>7.1f}ms "
                 f"{r['p99_ms']:>7.1f}ms {r['stale_p50_ms']:>8.1f}ms "
                 f"{r['stale_p99_ms']:>8.1f}ms {r['target_ms']:>6.0f}ms "
-                f"{r['violations']:>5d} {r['attainment']:>6.1%}")
+                f"{r['violations']:>5d} {r['attainment']:>6.1%} "
+                f"{r['degraded']:>5d} {r['dropped']:>5d} "
+                f"{r['availability']:>6.1%}")
         c = self.combined()
         lines.append(
             f"{'ALL':<12} {c['frames']:>7d} {c['p50_ms']:>7.1f}ms "

@@ -51,6 +51,17 @@ extract outputs with a revalidation budget and accuracy-budgeted
 per-feed admission control, and the sharing-tree cost model discounts
 extract costs by the measured hit rate (``chain_cost_us(...,
 gate_hit_rate=…)`` / ``CostCatalog.gate_hit_rates``).
+
+Serving is **fault-tolerant** (``repro.faults``): under an injected or
+real fault the server retries transient extract failures with bounded
+exponential backoff, a watchdog deadline bounds ``wait()``/``drain()``,
+and ``MultiStreamRuntime`` gives every feed a circuit breaker — a feed
+whose source or extract path stays sick is quarantined (its frames
+answered stale from the gate's keyframe, or dropped with exact
+accounting) while the rest of the fleet serves, then probed, replayed
+from its snapshot, and recovered.  ``served + degraded + dropped``
+always partitions each feed's ingested frames; see the ROADMAP's
+"Fault model" section for the full contract.
 """
 from repro.scheduler.sharing_tree import (
     SharingForest,

@@ -82,12 +82,19 @@ actually overlaps.  Un-observed servers pay only no-op calls.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.faults import (
+    ExtractFaultError,
+    ExtractStallError,
+    RetryPolicy,
+    resolve_faults,
+)
 from repro.obs import resolve_obs
 from repro.streaming.mllm import make_extract_fn, variant_models
 from repro.streaming.operators import OpContext, _bucket_pad
@@ -106,7 +113,7 @@ class _InFlightChunk:
     buffer once the device retires it."""
 
     __slots__ = ("preds", "reqs", "buf_key", "buf", "completed", "_np",
-                 "t_launch", "variant", "total")
+                 "t_launch", "variant", "total", "delay_polls")
 
     def __init__(self, preds, reqs: List["ExtractRequest"],
                  buf_key=None, buf=None):
@@ -119,6 +126,9 @@ class _InFlightChunk:
         self.t_launch = 0                 # obs stamp: forward launch (ns)
         self.variant = ""
         self.total = 0
+        #: injected artificial device latency: the chunk's completion is
+        #: observed this many ``poll()``s late (clock-free by design)
+        self.delay_polls = 0
 
     def ready(self) -> bool:
         return all(_is_ready(v) for v in self.preds.values())
@@ -161,6 +171,11 @@ class GatedExtractRequest:
         return self.inner is None or self.inner.dispatched
 
     @property
+    def failed(self) -> bool:
+        """The model rows' request exhausted its retry budget."""
+        return self.inner is not None and self.inner.failed
+
+    @property
     def done(self) -> bool:
         """The model rows' forward and every cached-row donor completed —
         ``result`` will not block."""
@@ -181,7 +196,8 @@ class ExtractRequest:
     numpy materialization, shared per coalesced chunk, on first access)."""
 
     __slots__ = ("variant", "frames", "feed", "_chunk", "_offset",
-                 "t_submit")
+                 "t_submit", "attempts", "isolate", "failed", "not_before",
+                 "fault_event")
 
     def __init__(self, variant: str, frames: np.ndarray, feed: str = ""):
         self.variant = variant            # big | small | pruned
@@ -190,6 +206,18 @@ class ExtractRequest:
         self._chunk: Optional[_InFlightChunk] = None
         self._offset = 0
         self.t_submit = 0                 # obs stamp: enqueue time (ns)
+        #: retry accounting: launches attempted / earliest dispatch round
+        #: the next attempt is eligible (exponential backoff) / whether a
+        #: failed chunk's members must relaunch one-per-chunk so a
+        #: poisoned feed's frames never exhaust chunk-mates' budgets
+        self.attempts = 0
+        self.not_before = 0
+        self.isolate = False
+        #: terminally failed (retry budget exhausted) — ``result`` raises
+        self.failed = False
+        #: fault-schedule event index, assigned once at enqueue so every
+        #: retry of this request replays the same scheduled fault
+        self.fault_event = 0
 
     @property
     def n(self) -> int:
@@ -206,6 +234,11 @@ class ExtractRequest:
 
     @property
     def result(self) -> Optional[Dict[str, np.ndarray]]:
+        if self.failed:
+            raise ExtractFaultError(
+                f"extract request feed={self.feed!r} "
+                f"variant={self.variant} n={self.n} failed after "
+                f"{self.attempts} attempts")
         if not self.done:
             return None
         preds = self._chunk.materialize()
@@ -275,7 +308,9 @@ class SharedExtractServer:
     MAX_PARTIAL_DEFERS = 2
 
     def __init__(self, ctx: OpContext, max_batch: int = 64,
-                 max_inflight: int = 2, gate=None, obs=None):
+                 max_inflight: int = 2, gate=None, obs=None,
+                 faults=None, retry: Optional[RetryPolicy] = None,
+                 drain_timeout_s: float = 120.0):
         assert max_batch >= 1 and max_inflight >= 1
         self.ctx = ctx
         self.max_batch = max_batch
@@ -288,6 +323,17 @@ class SharedExtractServer:
         self.obs = resolve_obs(obs, getattr(ctx, "obs", None))
         if self.gate is not None:
             self.gate.obs = self.obs
+        #: fault injection (explicit arg > ctx.faults > inert NULL_FAULTS)
+        self.faults = resolve_faults(faults, getattr(ctx, "faults", None))
+        #: bounded-retry policy for failed forwards (see repro.faults)
+        self.retry = retry if retry is not None else RetryPolicy()
+        #: watchdog deadline: ``wait()``/``drain()`` raise a descriptive
+        #: ``ExtractStallError`` naming the stuck chunk/bucket after this
+        #: many seconds without progress (a launch or a retirement resets
+        #: it; a long first compile blocks *inside* the forward and so
+        #: never trips it)
+        self.drain_timeout_s = drain_timeout_s
+        self._dispatch_seq = 0                # retry backoff clock (rounds)
         self._defers: Dict[Tuple, int] = {}   # bucket key -> deferred calls
         self._fns: Dict[str, Any] = {}
         self._queue: List[ExtractRequest] = []
@@ -310,6 +356,10 @@ class SharedExtractServer:
                 "dispatches": 0, "max_inflight_seen": 0,
                 "staging_allocated": 0, "staging_reused": 0,
                 "staging_skipped": 0,
+                # fault-tolerance tier: injected/observed forward faults,
+                # relaunch decisions, terminal failures, latency injections
+                "forward_faults": 0, "retries": 0, "retry_exhausted": 0,
+                "latency_faults": 0,
                 # live gauges (recomputed on read, see ``stats``)
                 "queue_depth": 0, "inflight": 0,
                 # cache tier (mirrors the gate's counters; stays 0 ungated)
@@ -389,6 +439,8 @@ class SharedExtractServer:
         req = ExtractRequest(variant=variant, frames=frames, feed=feed)
         if self.obs.enabled:
             req.t_submit = self.obs.now()
+        if self.faults.enabled:
+            req.fault_event = self.faults.next_event("forward", feed)
         self._queue.append(req)
         self._pending_reqs[feed] = self._pending_reqs.get(feed, 0) + 1
         self._pending_frames[feed] = \
@@ -396,6 +448,32 @@ class SharedExtractServer:
         self._pending_reqs_total += 1
         self._pending_frames_total += req.n
         return req
+
+    def probe(self, variant: str, frames: np.ndarray,
+              feed: str = "") -> ExtractRequest:
+        """Enqueue an *isolated* canary extract (circuit-breaker
+        half-open probe): it never coalesces with other feeds' requests,
+        so a probe that faults cannot burn chunk-mates' retry budgets."""
+        req = self._enqueue(variant, frames, feed)
+        req.isolate = True
+        return req
+
+    def cancel(self, req: ExtractRequest) -> bool:
+        """Remove a still-queued request (quarantine path: a tripped
+        feed's parked submissions must not launch pointless forwards).
+        Returns False when the request already dispatched or left the
+        queue — its forward, if any, retires normally and is ignored."""
+        if req.dispatched or req.failed:
+            return False
+        try:
+            self._queue.remove(req)
+        except ValueError:
+            return False
+        self._pending_reqs[req.feed] -= 1
+        self._pending_frames[req.feed] -= req.n
+        self._pending_reqs_total -= 1
+        self._pending_frames_total -= req.n
+        return True
 
     def pending_frames(self, feed: Optional[str] = None) -> int:
         """Frames queued and not yet dispatched (running counter)."""
@@ -424,9 +502,58 @@ class SharedExtractServer:
         self.stats["staging_allocated"] += 1
         return np.empty((bucket,) + shape, dtype)
 
-    def _launch(self, variant: str, chunk: List[ExtractRequest]) -> None:
-        """Pack one chunk and launch its forward asynchronously."""
+    def _chunk_failed(self, variant: str,
+                      chunk: List[ExtractRequest]) -> None:
+        """A chunk's forward faulted (injected or real): every member
+        request stays queued for an *isolated* relaunch after its
+        exponential backoff, or — past ``retry.max_attempts`` — turns
+        terminally ``failed`` and leaves the queue (the runtime's
+        circuit breaker takes over from there)."""
         obs = self.obs
+        self.stats["forward_faults"] += 1
+        seq = self._dispatch_seq
+        for r in chunk:
+            r.attempts += 1
+            r.isolate = True
+            if r.attempts >= self.retry.max_attempts:
+                r.failed = True
+                self.stats["retry_exhausted"] += 1
+                # terminal: dispatch removes it from the queue below
+                self._pending_reqs[r.feed] -= 1
+                self._pending_frames[r.feed] -= r.n
+                self._pending_reqs_total -= 1
+                self._pending_frames_total -= r.n
+            else:
+                r.not_before = seq + self.retry.backoff_rounds(r.attempts)
+                self.stats["retries"] += 1
+            if obs.enabled:
+                track = f"feed:{r.feed}"
+                obs.tracer.instant(
+                    f"fault:forward[{variant}]", "fault", track=track,
+                    n=r.n)
+                if r.failed:
+                    obs.metrics.inc(f"faults/exhausted/{r.feed}", 1)
+                else:
+                    obs.tracer.instant("retry", "retry", track=track,
+                                       n=r.n)
+                    obs.metrics.inc(f"faults/retries/{r.feed}", 1)
+
+    def _launch(self, variant: str, chunk: List[ExtractRequest]) -> bool:
+        """Pack one chunk and launch its forward asynchronously; returns
+        False when the forward faulted (members re-staged or failed)."""
+        obs = self.obs
+        faults = self.faults
+        delay = 0
+        if faults.enabled:
+            for r in chunk:
+                f = faults.fire("forward", r.feed, variant,
+                                r.fault_event, r.attempts)
+                if f is None:
+                    continue
+                if f[0] == "error":
+                    self._chunk_failed(variant, chunk)
+                    return False
+                delay = max(delay, f[1])        # latency
         t_stage = obs.now() if obs.enabled else 0
         total = sum(r.n for r in chunk)
         bucket = _bucket_pad(total)
@@ -450,12 +577,32 @@ class SharedExtractServer:
                 buf[total:bucket] = 0
             dev = jnp.asarray(buf)
         t_disp = obs.now() if obs.enabled else 0
-        preds = self._fn(variant)(dev)     # async dispatch: returns now
+        if faults.enabled:
+            # with the injector live, a real forward exception follows
+            # the same retry path as an injected one; without it, errors
+            # propagate exactly as before (no behavior change)
+            try:
+                preds = self._fn(variant)(dev)
+            except AssertionError:
+                raise
+            except Exception:
+                if buf is not None:
+                    self._staging.setdefault(buf_key, []).append(buf)
+                self._chunk_failed(variant, chunk)
+                return False
+        else:
+            preds = self._fn(variant)(dev)  # async dispatch: returns now
         fl = _InFlightChunk(preds, list(chunk), buf_key, buf)
+        fl.variant = variant
+        fl.total = total
+        if delay:
+            fl.delay_polls = delay
+            self.stats["latency_faults"] += 1
+            if obs.enabled:
+                obs.tracer.instant(f"fault:latency[{variant}]", "fault",
+                                   track="device", n=total)
         if obs.enabled:
             fl.t_launch = obs.now()
-            fl.variant = variant
-            fl.total = total
             tr = obs.tracer
             tr.span("staging", "staging", t_stage, t_disp,
                     track="server", n=total)
@@ -489,6 +636,7 @@ class SharedExtractServer:
             self.stats["coalesced_batches"] += 1
         self.stats["max_inflight_seen"] = max(
             self.stats["max_inflight_seen"], len(self._inflight))
+        return True
 
     def dispatch(self, budget: Optional[int] = None) -> int:
         """Launch queued requests as asynchronous forwards and return
@@ -509,14 +657,34 @@ class SharedExtractServer:
         deferred ``MAX_PARTIAL_DEFERS`` times (a feed whose chunks never
         fill a bucket must not starve behind feeds that keep the device
         busy).  ``drain()`` flushes deferred partials at the barrier,
-        exactly like the synchronous path always did."""
+        exactly like the synchronous path always did.
+
+        With a live fault injector three more queue states exist:
+        terminally *failed* requests leave the queue here (their owner
+        sees ``failed``/``result`` raise), requests inside their backoff
+        window (``not_before`` > the dispatch round counter) stay queued
+        untouched, and *isolated* retry requests launch one-per-chunk
+        ahead of everything else so a poisoned request can never spend a
+        healthy chunk-mate's retry budget."""
+        seq = self._dispatch_seq = self._dispatch_seq + 1
         room = self.max_inflight - len(self._inflight)
         if budget is not None:
             room = min(room, budget)
         if room <= 0 or not self._queue:
             return 0
+        launched = 0
+        taken: set = set()
+        iso: List[ExtractRequest] = []
         groups: Dict[Tuple, List[ExtractRequest]] = {}
         for r in self._queue:
+            if r.failed:
+                taken.add(id(r))      # terminal: drop from the queue
+                continue
+            if r.not_before > seq:
+                continue              # backing off: not eligible yet
+            if r.isolate:
+                iso.append(r)
+                continue
             key = (r.variant, r.frames.shape[1:], r.frames.dtype.str)
             groups.setdefault(key, []).append(r)
         full: List[Tuple[Tuple, List[ExtractRequest]]] = []
@@ -534,21 +702,30 @@ class SharedExtractServer:
             if chunk:
                 (full if size == _bucket_pad(size) else partial).append(
                     (key, chunk))
-        launched = 0
-        taken: set = set()
 
         def launch(key: Tuple, chunk: List[ExtractRequest],
                    served: bool) -> None:
             nonlocal launched
-            self._launch(key[0], chunk)
+            ok = self._launch(key[0], chunk)
             if served:
                 # only a *partial* launch services the waiting bucket — a
                 # full chunk of the same key must not reset the clock of
                 # partial requests still parked behind it
                 self._defers.pop(key, None)
-            taken.update(id(r) for r in chunk)
-            launched += 1
+            if ok:
+                taken.update(id(r) for r in chunk)
+                launched += 1
+            else:
+                # the forward faulted: members stay queued for isolated
+                # retry, except those that just exhausted their budget
+                taken.update(id(r) for r in chunk if r.failed)
 
+        # isolated retries outrank everything: they are the oldest work
+        # in the queue and each occupies a whole chunk by design
+        for r in iso:
+            if launched >= room:
+                break
+            launch((r.variant,), [r], served=False)
         overdue = [c for c in partial
                    if self._defers.get(c[0], 0) >= self.MAX_PARTIAL_DEFERS]
         fresh = [c for c in partial
@@ -614,7 +791,12 @@ class SharedExtractServer:
         still: List[_InFlightChunk] = []
         retired = 0
         for fl in self._inflight:
-            if fl.ready():
+            if fl.delay_polls > 0:
+                # injected device latency: completion observed late,
+                # one poll at a time (clock-free)
+                fl.delay_polls -= 1
+                still.append(fl)
+            elif fl.ready():
                 self._retire(fl)
                 retired += 1
             else:
@@ -642,27 +824,75 @@ class SharedExtractServer:
         if not progressed and not resumed:
             self.wait()
 
+    def _stuck_desc(self) -> str:
+        """Name the work the watchdog is stuck on — the error message a
+        timed-out ``wait()``/``drain()`` raises."""
+        if self._inflight:
+            fl = self._inflight[0]
+            total = sum(r.n for r in fl.reqs)
+            feeds = sorted({r.feed for r in fl.reqs})
+            return (f"in-flight chunk variant={fl.variant!r} "
+                    f"bucket={_bucket_pad(total)} ({len(fl.reqs)} reqs, "
+                    f"{total} frames, feeds={feeds})")
+        if self._queue:
+            r = self._queue[0]
+            return (f"queued request feed={r.feed!r} "
+                    f"variant={r.variant!r} n={r.n} "
+                    f"attempts={r.attempts} "
+                    f"not_before={r.not_before} (round {self._dispatch_seq})")
+        return "no queued or in-flight work"
+
     def wait(self) -> int:
         """Block until at least one in-flight forward completes
         (dispatching queued work first when nothing is in flight); returns
         the number of forwards retired.  The runtime's stall path: called
-        only when no feed can progress and nothing polled ready."""
+        only when no feed can progress and nothing polled ready.
+
+        Deadline-bounded: if ``drain_timeout_s`` passes without a single
+        retirement or launch, raises ``ExtractStallError`` naming the
+        stuck chunk instead of spinning forever (injected latency burns
+        one poll per iteration, so it always terminates well before)."""
         if not self._inflight:
             self.dispatch()
-        if not self._inflight:
-            return 0
-        self._inflight[0].block()
-        return self.poll()
+        deadline = time.monotonic() + self.drain_timeout_s
+        while self._inflight:
+            self._inflight[0].block()
+            retired = self.poll()
+            if retired:
+                return retired
+            if not self.dispatch() and time.monotonic() > deadline:
+                raise ExtractStallError(
+                    f"wait(): no extract progress for "
+                    f"{self.drain_timeout_s:g}s; stuck on "
+                    f"{self._stuck_desc()}")
+        return 0
 
     def drain(self) -> int:
         """Synchronous barrier: run every queued and in-flight request to
         completion; returns the number of forwards.  Survives as the
         end-of-run / warmup / checkpoint flush — the steady-state path is
-        ``dispatch``/``poll``."""
+        ``dispatch``/``poll``.
+
+        Deadline-bounded (was an unbounded busy-wait): every round that
+        launches or retires nothing eats into ``drain_timeout_s``; when
+        the budget is gone an ``ExtractStallError`` names the stuck
+        bucket/variant.  Rounds that *do* progress reset the deadline, so
+        a long healthy drain never trips it."""
         forwards0 = self.stats["forwards"]
+        deadline = time.monotonic() + self.drain_timeout_s
         while self._queue or self._inflight:
-            self.dispatch()
-            while self._inflight:
+            launched = self.dispatch()
+            retired = 0
+            if self._inflight:
                 self._inflight[0].block()
-                self.poll()
+                retired = self.poll()
+            if launched or retired:
+                deadline = time.monotonic() + self.drain_timeout_s
+            elif time.monotonic() > deadline:
+                raise ExtractStallError(
+                    f"drain(): no extract progress for "
+                    f"{self.drain_timeout_s:g}s with "
+                    f"{len(self._queue)} queued / "
+                    f"{len(self._inflight)} in-flight forwards; stuck on "
+                    f"{self._stuck_desc()}")
         return self.stats["forwards"] - forwards0

@@ -44,6 +44,7 @@ from typing import Any, Dict, List, Optional, Union
 
 import numpy as np
 
+from repro.faults import OPEN, CircuitBreaker, resolve_faults
 from repro.scheduler.extract_server import (
     PendingResume,
     SharedExtractServer,
@@ -85,6 +86,19 @@ class FeedResult:
     mllm_frames: int
     per_query: Dict[str, RunResult]
     plan: str
+    #: fault-tolerance accounting — ``served + degraded + dropped`` exactly
+    #: partitions the feed's ingested frames.  ``served`` frames are
+    #: bitwise identical to a fault-free run; ``degraded`` frames were
+    #: answered from the semantic gate's last keyframe (marked ``stale``
+    #: in ``degraded_records``); ``dropped`` frames had no stale answer
+    #: available and are counted, never silently invented.
+    served: int = 0
+    degraded: int = 0
+    dropped: int = 0
+    degraded_records: List[Dict[str, Any]] = \
+        dataclasses.field(default_factory=list)
+    #: per-feed circuit-breaker counters (trips/probes/recoveries)
+    breaker: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -257,6 +271,32 @@ class _FeedState:
         self.labels: List[Dict[str, Any]] = []
         self.pendings: List[tuple] = []      # (group, _Pending) FIFO
         self.arrival = arrival if arrival is not None else [0]
+        # ---- fault-tolerance state (inert without a live injector) ----
+        #: circuit breaker quarantining this feed after retry exhaustion
+        self.breaker: Optional[CircuitBreaker] = None
+        #: outstanding frame-range tickets: start idx -> groups still
+        #: working on that micro-batch.  FIFO serving makes the
+        #: outstanding set a contiguous suffix, so ``served_upto`` (the
+        #: exactly-once frontier) is just the minimum outstanding start.
+        self.tickets: Dict[int, int] = {}
+        #: last per-feed recovery snapshot (ops + gate + sink/window
+        #: lengths + the stream offset of the next pull)
+        self.snap: Optional[Dict[str, Any]] = None
+        #: captured at trip: the gate's newest concrete keyframe answer,
+        #: served as the ``stale`` degraded-mode result (None -> drop)
+        self.stale_answer: Optional[Dict[str, Any]] = None
+        #: trip set this: on recovery, replay frames [snap.next_pull,
+        #: replay_to) with sinks suppressed to rebuild operator state
+        self.replay_to: Optional[int] = None
+        self.degraded_records: List[Dict[str, Any]] = []
+        self.n_degraded = 0
+        self.n_dropped = 0
+
+    @property
+    def served_upto(self) -> int:
+        """Every frame below this index has fully fanned out through
+        every sharing group (the exactly-once frontier)."""
+        return min(self.tickets) if self.tickets else self.source_index
 
     @property
     def name(self) -> str:
@@ -276,7 +316,11 @@ class MultiStreamRuntime:
                  parallel_tails: bool = True,
                  pipelined: bool = True,
                  max_inflight: int = 2,
-                 gate=None):
+                 gate=None,
+                 faults=None,
+                 breaker_cooldown: int = 4,
+                 snapshot_every: int = 8,
+                 ingest_retries: int = 2):
         assert feeds, "need at least one feed"
         names = [f.name for f in feeds]
         assert len(set(names)) == len(names), f"duplicate feed names {names}"
@@ -285,9 +329,26 @@ class MultiStreamRuntime:
         self.ctx = dataclasses.replace(ctx, micro_batch=micro_batch)
         self.micro_batch = micro_batch
         self.pipelined = pipelined
+        #: fault injection (explicit arg > ctx.faults > the server's own >
+        #: inert NULL_FAULTS); the resolved injector is pushed into the
+        #: server so ingest and forward faults draw from one schedule
+        self.faults = resolve_faults(
+            faults, getattr(ctx, "faults", None),
+            server.faults if server is not None
+            and server.faults.enabled else None)
         self.server = server if server is not None \
             else SharedExtractServer(self.ctx, max_inflight=max_inflight,
-                                     gate=gate)
+                                     gate=gate, faults=self.faults)
+        if self.faults.enabled and not self.server.faults.enabled:
+            self.server.faults = self.faults
+        self._chaos = self.faults.enabled
+        self.breaker_cooldown = breaker_cooldown
+        #: take a per-feed recovery snapshot every this many scheduling
+        #: rounds (when the feed has no outstanding work) — bounds both
+        #: snapshot overhead and the replay a recovery pays
+        self.snapshot_every = max(snapshot_every, 1)
+        #: bounded redelivery attempts for a corrupt ingest transport
+        self.ingest_retries = ingest_retries
         #: observability rides the server (one trace across every feed);
         #: attach via ``ctx.obs`` or the server's ``obs=``
         self.obs = self.server.obs
@@ -381,9 +442,32 @@ class MultiStreamRuntime:
         group lane (so stateful post-extract ops observe stream order);
         re-suspensions keep their position in the queue.  Returns the
         number of continuations resumed."""
-        fs.pendings, resumed = settle_fifo(
-            fs.pendings, lambda group, p: group.resume(p))
+        if not self._chaos:
+            fs.pendings, resumed = settle_fifo(
+                fs.pendings, lambda group, p: group.resume(p))
+            return resumed
+
+        def resume(group, p):
+            nxt = group.resume(p)
+            if nxt is None:
+                # this group finished the micro-batch: retire its share
+                # of the frame-range ticket (advances ``served_upto``)
+                self._ticket_done(fs, p.batch)
+            return nxt
+
+        fs.pendings, resumed = settle_fifo(fs.pendings, resume)
         return resumed
+
+    def _ticket_done(self, fs: _FeedState, batch: Batch) -> None:
+        i0 = batch.get("_ticket")
+        if i0 is None:
+            return                 # replay / flush batches carry no ticket
+        left = fs.tickets.get(i0)
+        if left is not None:
+            if left <= 1:
+                del fs.tickets[i0]
+            else:
+                fs.tickets[i0] = left - 1
 
     def _drain_all(self) -> None:
         """Blocking barrier: run every queued and in-flight forward and
@@ -397,7 +481,17 @@ class MultiStreamRuntime:
     def _warmup(self) -> None:
         """One untimed batch per feed through its full group set (and the
         server — compiling the shared extract programs is the point), then
-        rewind streams, reset ops, drop accumulators and server stats."""
+        rewind streams, reset ops, drop accumulators and server stats.
+        The fault injector sleeps through warmup: warmup traffic must not
+        consume schedule events (or fail unobserved)."""
+        was_enabled = self.faults.enabled
+        self.faults.enabled = False
+        try:
+            self._warmup_inner()
+        finally:
+            self.faults.enabled = was_enabled
+
+    def _warmup_inner(self) -> None:
         for fs in self._feeds:
             def advance(batch):
                 for g in fs.groups:
@@ -417,6 +511,280 @@ class MultiStreamRuntime:
             # measured stream — the gate resets exactly like the ops do
             self.server.gate.reset()
         self.server.reset_stats()
+
+    # ------------------------------------------------------------------
+    # fault-tolerant serving (active only with a live injector; every
+    # entry point below is behind ``self._chaos``)
+    # ------------------------------------------------------------------
+    def _snap_feed(self, fs: _FeedState) -> None:
+        """Per-feed recovery snapshot — taken only when the feed has no
+        outstanding work, so every captured structure is quiescent and
+        the semantic cache holds no pending entries."""
+        assert not fs.pendings and not fs.tickets
+        gate = self.server.gate
+        fs.snap = {
+            "next_pull": fs.source_index,
+            "groups": [[op.snapshot() for op in g.all_ops()]
+                       for g in fs.groups],
+            "window_lens": [[len(w) for w in g.windows]
+                            for g in fs.groups],
+            "pcounts": [dict(g.pcounts) for g in fs.groups],
+            "counts": [[dict(c) for c in g.counts] for g in fs.groups],
+            "gate": gate.snapshot_feed(fs.name)
+            if gate is not None and gate.active else None,
+        }
+
+    def _rollback(self, fs: _FeedState, keep_upto: int) -> None:
+        """Restore ops/gate/accumulators to the feed's last snapshot.
+        Sink records below ``keep_upto`` (the exactly-once frontier) are
+        final — *served* — and are kept; the recovery replay re-drives
+        those frames with sink collection suppressed, so operator state
+        catches back up without serving any frame twice."""
+        snap = fs.snap
+        gate = self.server.gate
+        for g, states, lens, pc, cc in zip(
+                fs.groups, snap["groups"], snap["window_lens"],
+                snap["pcounts"], snap["counts"]):
+            for op, s in zip(g.all_ops(), states):
+                if isinstance(op, SinkOp):
+                    continue     # sinks truncate content-based below
+                op.restore(s)
+            for tail in g.exe.tails:
+                sink = tail[-1]
+                sink.collected = [r for r in sink.collected
+                                  if r.get("idx", -1) < keep_upto]
+            for wl, L in zip(g.windows, lens):
+                del wl[L:]       # replay re-emits deterministically
+            g.pcounts = dict(pc)
+            g.counts = [dict(c) for c in cc]
+        if gate is not None and snap.get("gate") is not None:
+            gate.restore_feed(fs.name, snap["gate"])
+
+    def _degrade_range(self, fs: _FeedState, a: int, b: int) -> None:
+        """Account frames [a, b) as degraded (stale keyframe answer) or
+        dropped (no answer available) — exact loss accounting, never a
+        silently wrong result."""
+        n = b - a
+        if n <= 0:
+            return
+        obs = self.obs
+        if fs.stale_answer is not None:
+            for i in range(a, b):
+                fs.degraded_records.append(
+                    {"idx": i, "stale": True, "answer": fs.stale_answer})
+            fs.n_degraded += n
+            if obs.enabled:
+                obs.tracer.instant("degraded", "degraded",
+                                   track=f"feed:{fs.name}", n=n)
+                obs.metrics.inc(f"faults/degraded/{fs.name}", n)
+                obs.slo.record_degraded(fs.name, n)
+        else:
+            fs.n_dropped += n
+            if obs.enabled:
+                obs.tracer.instant("dropped", "degraded",
+                                   track=f"feed:{fs.name}", n=n)
+                obs.metrics.inc(f"faults/dropped/{fs.name}", n)
+                obs.slo.record_dropped(fs.name, n)
+
+    def _trip(self, fs: _FeedState, reason: str) -> None:
+        """Open the feed's circuit: capture the stale-answer fallback,
+        cancel parked submissions, account the un-served suffix and roll
+        the feed back to its last snapshot so a later recovery can replay
+        forward.  The rest of the fleet is untouched — its requests keep
+        flowing through the shared server."""
+        obs = self.obs
+        gate = self.server.gate
+        # let healthy in-flight work finish first: an *ingest* trip
+        # leaves the extract path intact, so frames already accepted can
+        # still be served exactly once — only an extract trip (a failed
+        # request among the pendings) skips straight to cancellation
+        while fs.pendings and \
+                not any(p.req.failed for _, p in fs.pendings):
+            self.server.drain()
+            self._settle(fs)
+        keep_upto = fs.served_upto
+        pulled_upto = fs.source_index
+        if gate is not None and gate.active:
+            fs.stale_answer = gate.stale_answer(fs.name)
+        for _, p in fs.pendings:
+            inner = getattr(p.req, "inner", p.req)
+            if inner is not None:
+                self.server.cancel(inner)
+        fs.pendings = []
+        fs.tickets.clear()
+        self._degrade_range(fs, keep_upto, pulled_upto)
+        self._rollback(fs, keep_upto)
+        fs.replay_to = keep_upto
+        fs.breaker.trip(reason)
+        if obs.enabled:
+            obs.tracer.instant(f"quarantine[{fs.name}]", "quarantine",
+                               track=f"feed:{fs.name}")
+            obs.metrics.inc(f"faults/trips/{fs.name}", 1)
+
+    def _outage_turn(self, fs: _FeedState,
+                     remaining: Dict[str, int]) -> None:
+        """One quarantined scheduling round: the frames the feed would
+        have pulled are accounted (stale-served or dropped) without
+        touching the stream — recovery repositions it.  The skipped pull
+        still consumes its source schedule event: quarantine does not
+        freeze the fault timeline, so a count-limited outage ages out
+        and the probe's peek can eventually see daylight."""
+        if remaining[fs.name] <= 0:
+            return
+        take = min(self.micro_batch, remaining[fs.name])
+        self.faults.next_event("source", fs.name)
+        self._degrade_range(fs, fs.source_index, fs.source_index + take)
+        fs.source_index += take
+        remaining[fs.name] -= take
+
+    def _canary_ok(self, fs: _FeedState) -> bool:
+        """Drive one isolated canary extract for the feed through the
+        real server.  It consumes a forward schedule event — an honest
+        probe pays the same schedule the feed's next request would."""
+        variant = None
+        for g in fs.groups:
+            for op in g.exe.prefix:
+                if isinstance(op, MLLMExtractOp):
+                    v = getattr(op, "model", "small")
+                    variant = v if v in SharedExtractServer.VARIANTS \
+                        else "small"
+                    break
+            if variant is not None:
+                break
+        if variant is None:
+            return True      # no extract path: the transport peek decides
+        frames = np.zeros((1,) + tuple(self.ctx.frame_shape),
+                          dtype=np.float32)
+        req = self.server.probe(variant, frames, feed=fs.name)
+        while not req.done and not req.failed:
+            self.server.dispatch()
+            if self.server._inflight:
+                self.server._inflight[0].block()
+            self.server.poll()
+        return not req.failed
+
+    def _replay(self, fs: _FeedState) -> bool:
+        """Recovery: reposition the stream and re-drive frames
+        [snap.next_pull, replay_to) with sink collection suppressed —
+        operator/gate/window state catches back up to the exactly-once
+        frontier without serving any frame twice — then skip the stream
+        past the degraded gap.  A terminal extract failure mid-replay
+        rolls back again and reports False (the breaker re-opens with a
+        doubled cooldown)."""
+        snap = fs.snap
+        start = snap["next_pull"]
+        target = fs.replay_to
+        stream = fs.feed.stream
+        stream.reset()
+        if start:
+            stream.batch(start)
+        pos = start
+        ok = True
+        while pos < target and ok:
+            take = min(self.micro_batch, target - pos)
+            frames, _ = stream.batch(take)
+            batch = {"frames": frames,
+                     "idx": np.arange(pos, pos + take),
+                     "_suppress_sink": True}
+            for g in fs.groups:
+                p = g.start(batch)
+                if p is not None:
+                    fs.pendings.append((g, p))
+            pos += take
+            while fs.pendings:
+                if any(p.req.failed for _, p in fs.pendings):
+                    ok = False
+                    break
+                self.server.drain()
+                self._settle(fs)
+        if not ok:
+            for _, p in fs.pendings:
+                inner = getattr(p.req, "inner", p.req)
+                if inner is not None:
+                    self.server.cancel(inner)
+            fs.pendings = []
+            self._rollback(fs, fs.replay_to)
+            return False
+        if fs.source_index > target:
+            stream.batch(fs.source_index - target)  # skip the degraded gap
+        return True
+
+    def _probe(self, fs: _FeedState) -> None:
+        """Half-open: one probe decides.  The transport is *peeked*
+        (would the next delivery fail past the retry budget?) without
+        consuming a schedule event; the device path pays a real isolated
+        canary forward.  Success replays from the last snapshot and
+        closes the breaker; failure re-opens it with a doubled cooldown."""
+        obs = self.obs
+        br = fs.breaker
+        if obs.enabled:
+            obs.tracer.instant(f"probe[{fs.name}]", "quarantine",
+                               track=f"feed:{fs.name}")
+            obs.metrics.inc(f"faults/probes/{fs.name}", 1)
+        fi = self.faults
+        f = fi.fault_at("source", fs.name, "",
+                        fi.peek_event("source", fs.name))
+        src_dead = f is not None and f[0] == "corrupt" \
+            and f[1] > self.ingest_retries
+        if src_dead or not self._canary_ok(fs) or not self._replay(fs):
+            br.probe_failed()
+            return
+        br.close()
+        fs.stale_answer = None
+        fs.replay_to = None
+        self._snap_feed(fs)
+        if obs.enabled:
+            obs.tracer.instant(f"recovered[{fs.name}]", "quarantine",
+                               track=f"feed:{fs.name}")
+            obs.metrics.inc(f"faults/recoveries/{fs.name}", 1)
+
+    def _ingest(self, fs: _FeedState, take: int) -> tuple:
+        """One guarded pull: returns ``("ok", frames, labels)``,
+        ``("stall",)`` — the feed produced nothing this round — or
+        ``("lost",)`` when corrupt-delivery retries are exhausted (the
+        caller accounts the frames and trips the breaker)."""
+        fi = self.faults
+        ev = fi.next_event("source", fs.name)
+        f = fi.fault_at("source", fs.name, "", ev)
+        if f is not None and f[0] == "stall":
+            fi.fire("source", fs.name, "", ev)           # log the stall
+            if self.obs.enabled:
+                self.obs.tracer.instant("fault:stall", "fault",
+                                        track=f"feed:{fs.name}", n=take)
+            return ("stall",)
+        frames, labels = fs.feed.stream.batch(take)
+        if f is None:
+            return ("ok", frames, labels)
+        # corrupt transport: bounded redelivery against the same event —
+        # a cleared attempt returns the pristine frames (bitwise)
+        for attempt in range(self.ingest_retries + 1):
+            got = fi.transport(fs.name, frames, ev, attempt)
+            if fi.delivered_ok(got):
+                return ("ok", got, labels)
+        return ("lost",)
+
+    def _chaos_turn(self, fs: _FeedState,
+                    remaining: Dict[str, int]) -> Optional[bool]:
+        """Breaker gate in front of a feed's scheduling turn: None lets
+        the normal serve path run; otherwise the turn was consumed here
+        and the value is whether it made progress (a quarantined feed
+        with nothing left to account is *idle* — claiming progress would
+        starve the other feeds' force-dispatch/wait path forever)."""
+        br = fs.breaker
+        if br.closed:
+            if any(p.req.failed for _, p in fs.pendings):
+                self._trip(fs, "extract retry budget exhausted")
+                return True
+            return None
+        if br.state == OPEN:
+            if remaining[fs.name] <= 0:
+                br.tick()
+                return False
+            self._outage_turn(fs, remaining)
+            br.tick()
+            return True
+        self._probe(fs)
+        return True
 
     # ------------------------------------------------------------------
     def run(self, n_frames: Union[int, Dict[str, int]],
@@ -439,9 +807,21 @@ class MultiStreamRuntime:
             fs.labels = []
             for g in fs.groups:
                 g.begin_run()
+            if self._chaos:
+                fs.breaker = CircuitBreaker(self.breaker_cooldown)
+                fs.tickets = {}
+                fs.snap = None
+                fs.stale_answer = None
+                fs.replay_to = None
+                fs.degraded_records = []
+                fs.n_degraded = fs.n_dropped = 0
         if warmup and not self._restored:
             self._warmup()
         self._restored = False
+        if self._chaos:
+            # run-start snapshot: rollback always has a floor to land on
+            for fs in self._feeds:
+                self._snap_feed(fs)
         # per-run (not lifetime) model load, per prefix/tail component —
         # the same convention as the single-stream executors
         mllm_start = {
@@ -459,18 +839,50 @@ class MultiStreamRuntime:
                 self._feeds[:rnd % len(self._feeds)]
             progressed = False
             for fs in order:
+                if self._chaos:
+                    ct = self._chaos_turn(fs, remaining)
+                    if ct is not None:      # trip / quarantine / probe
+                        progressed = progressed or ct
+                        continue
                 if remaining[fs.name] <= 0:
                     continue
                 if len(fs.pendings) >= self.max_pending * len(fs.groups):
                     continue                      # per-stream backpressure
+                if self._chaos and not fs.tickets and not fs.pendings \
+                        and rnd % self.snapshot_every == 0:
+                    self._snap_feed(fs)           # opportunistic, quiescent
                 take = min(self.micro_batch, remaining[fs.name])
                 obs = self.obs
                 t_pull = obs.now() if obs.enabled else 0
-                frames, labels = fs.feed.stream.batch(take)
+                if self._chaos:
+                    got = self._ingest(fs, take)
+                    if got[0] == "stall":
+                        continue   # the feed produced nothing this round
+                    if got[0] == "lost":
+                        # delivery retries exhausted: quarantine first
+                        # (healthy in-flight frames settle and serve),
+                        # then account the lost batch itself
+                        self._trip(fs,
+                                   "ingest delivery retries exhausted")
+                        self._degrade_range(fs, fs.source_index,
+                                            fs.source_index + take)
+                        fs.source_index += take
+                        remaining[fs.name] -= take
+                        progressed = True
+                        continue
+                    frames, labels = got[1], got[2]
+                else:
+                    frames, labels = fs.feed.stream.batch(take)
                 fs.labels.extend(labels)
                 batch = {"frames": frames,
                          "idx": np.arange(fs.source_index,
                                           fs.source_index + take)}
+                if self._chaos:
+                    # frame-range ticket: retired once every group's
+                    # fan-out for this micro-batch completes — the
+                    # outstanding set defines ``served_upto``
+                    fs.tickets[fs.source_index] = len(fs.groups)
+                    batch["_ticket"] = fs.source_index
                 if obs.enabled:
                     # lifecycle stamps ride the batch dict (every op
                     # copies it, so they survive to fan-out); the shared
@@ -487,6 +899,8 @@ class MultiStreamRuntime:
                     p = g.start(batch)
                     if p is not None:
                         fs.pendings.append((g, p))
+                    elif self._chaos:
+                        self._ticket_done(fs, batch)
                 progressed = True
             if self.pipelined:
                 # overlap: ship the queue when the coalescing window fills
@@ -502,6 +916,13 @@ class MultiStreamRuntime:
             rnd += 1
         self._drain_all()
         for fs in self._feeds:
+            if self._chaos and fs.breaker is not None \
+                    and not fs.breaker.closed:
+                # still quarantined at end of run: window aggregates over
+                # the outage would cover frames the feed never served —
+                # withhold them (never wrong) instead of emitting
+                # partial answers
+                continue
             for g in fs.groups:
                 g.flush()
         wall = time.perf_counter() - t0
@@ -561,6 +982,14 @@ class MultiStreamRuntime:
                 name=fs.name, n_frames=n, mllm_frames=feed_mllm,
                 per_query=per_query,
                 plan=self.forests[fs.name].describe(),
+                # served + degraded + dropped == n: the exact partition
+                # of the feed's ingested frames the chaos tests assert
+                served=n - fs.n_degraded - fs.n_dropped,
+                degraded=fs.n_degraded,
+                dropped=fs.n_dropped,
+                degraded_records=list(fs.degraded_records),
+                breaker=dict(fs.breaker.counters)
+                if fs.breaker is not None else {},
             )
         gate = self.server.gate
         if gate is not None and gate.active and \
@@ -582,6 +1011,11 @@ class MultiStreamRuntime:
             m.set_gauge("run/fps", total_qframes / wall)
             for name, fr in feeds.items():
                 m.counter(f"mllm_frames/{name}").set(fr.mllm_frames)
+            if self._chaos:
+                for fs in self._feeds:
+                    if fs.breaker is not None:
+                        m.ingest(f"breaker/{fs.name}",
+                                 fs.breaker.counters)
         return MultiStreamResult(
             fps=total_qframes / wall,
             wall_s=wall,

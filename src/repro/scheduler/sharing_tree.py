@@ -285,6 +285,15 @@ class SharingGroup:
     def is_shared(self) -> bool:
         return self.n_queries > 1
 
+    @property
+    def failure_domain(self) -> List[str]:
+        """The queries that lose answers together when this group's
+        shared prefix faults: sharing trades isolation for model load,
+        so every member query is one failure domain.  (Across groups the
+        blast radius stays per-feed — the circuit breaker quarantines
+        one feed, never the fleet.)"""
+        return list(self.execution.queries)
+
 
 @dataclasses.dataclass
 class SharingForest:
@@ -311,7 +320,9 @@ class SharingForest:
                 qs = ",".join(g.execution.queries)
                 tag = (f"shared Δ{g.saving_us:.0f}µs/frame"
                        if g.is_shared else "independent")
-                lines.append(f"  {elbow} {head}  {{{qs}}}  [{tag}]")
+                dom = (f" domain={len(g.failure_domain)}q"
+                       if g.is_shared else "")
+                lines.append(f"  {elbow} {head}  {{{qs}}}  [{tag}]{dom}")
         return "\n".join(lines)
 
 

@@ -125,6 +125,20 @@ class SemanticExtractCache:
         while len(entries) > self.max_entries:
             entries.popitem(last=False)
 
+    def newest_preds(self, feed: str) -> Optional[Dict[str, np.ndarray]]:
+        """The most recently touched keyframe's *concrete* extract
+        output for ``feed`` (entries still awaiting their donor forward
+        are skipped) — the degraded-mode fallback a quarantined feed
+        serves, marked stale, while its circuit is open."""
+        entries = self._feeds.get(feed)
+        if not entries:
+            return None
+        for key in reversed(entries):       # LRU order: newest last
+            preds = entries[key].preds
+            if preds is not None:
+                return preds
+        return None
+
     def __len__(self) -> int:
         return sum(len(e) for e in self._feeds.values())
 

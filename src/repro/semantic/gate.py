@@ -211,6 +211,18 @@ class SemanticGate:
         self.feed_counters.clear()
 
     # ------------------------------------------------------------------
+    def stale_answer(self, feed: str) -> Optional[dict]:
+        """The newest concrete keyframe extract output for ``feed``,
+        summarized to plain Python values — what degraded-mode serving
+        reports (marked ``stale``) while the feed's circuit is open.
+        None when the feed has no usable keyframe yet (the runtime then
+        *drops* with exact accounting instead of degrading)."""
+        preds = self.cache.newest_preds(feed)
+        if preds is None:
+            return None
+        return {k: np.asarray(v).tolist() for k, v in preds.items()}
+
+    # ------------------------------------------------------------------
     def snapshot_feed(self, feed: str) -> dict:
         return {"admission": self.controller.snapshot(feed),
                 "cache": self.cache.snapshot(feed)}

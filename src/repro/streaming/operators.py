@@ -120,6 +120,12 @@ class OpContext:
     #: ``NULL_OBS``: instrumented paths pay only no-op calls and stay
     #: bitwise identical to un-instrumented serving.
     obs: Any = None
+    #: optional ``repro.faults.FaultInjector`` — deterministic fault
+    #: injection + the retry/breaker machinery it exercises.  None
+    #: (default) resolves to the inert ``NULL_FAULTS``: every fault call
+    #: site is guarded by ``if faults.enabled:`` and the un-faulted
+    #: stack stays bitwise identical.
+    faults: Any = None
     frame_shape: Tuple[int, int, int] = (3, 128, 256)
     #: micro-batch size the driving runtime uses — operators that estimate
     #: stream density (adaptive pruning) read it instead of guessing
@@ -149,11 +155,16 @@ class SinkOp(Op):
 
     def process(self, batch: Batch) -> Batch:
         n = len(batch["idx"])
-        for i in range(n):
-            rec = {"idx": int(batch["idx"][i])}
-            for k, v in batch.get("attrs", {}).items():
-                rec[k] = np.asarray(v[i]).tolist()
-            self.collected.append(rec)
+        if not batch.get("_suppress_sink"):
+            # quarantine-recovery replay: frames re-driven to rebuild
+            # operator state were already accounted (served before the
+            # trip, or degraded/dropped during it) — re-collecting their
+            # records would serve them twice
+            for i in range(n):
+                rec = {"idx": int(batch["idx"][i])}
+                for k, v in batch.get("attrs", {}).items():
+                    rec[k] = np.asarray(v[i]).tolist()
+                self.collected.append(rec)
         if "window_results" in batch:
             self.collected.extend(batch["window_results"])
         return batch

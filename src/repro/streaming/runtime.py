@@ -22,6 +22,7 @@ from typing import Any, Dict, List
 
 import numpy as np
 
+from repro.faults import guard_stream
 from repro.obs import resolve_obs
 from repro.streaming.operators import (
     MLLMExtractOp,
@@ -207,8 +208,15 @@ class StreamRuntime(RunScaffold):
             if obs.enabled:
                 obs.slo.record("stream", (obs.now() - t_b) / 1e6, n=n0)
 
+        # solo ingest rides the same transport-fault protocol as the
+        # multi-feed runtime: validation + bounded redelivery when a
+        # fault injector is live, the bare stream otherwise (zero cost).
+        # Warmup above ran unguarded — it must not consume schedule
+        # events the measured stream would then never see.
+        guarded = guard_stream(stream, getattr(self.ctx, "faults", None))
+
         t0 = time.perf_counter()
-        drive_stream(stream, n_frames, self.micro_batch,
+        drive_stream(guarded, n_frames, self.micro_batch,
                      self._source_index, advance, labels_all)
         if flush:
             flush_ops(self.plan.ops, window_results.extend)

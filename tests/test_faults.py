@@ -1,0 +1,384 @@
+"""Fault-tolerant serving contract tests.
+
+The chaos tier's promises, each pinned here:
+
+* the fault schedule is **deterministic** — a pure function of
+  (seed, site, feed, event, attempt), independent of interleaving;
+* ``NULL_FAULTS`` is **inert** — a run with it is bitwise identical to a
+  run without the faults package in the loop at all;
+* faults the stack absorbs (transient forward errors, injected device
+  latency, source stalls, corrupt deliveries cleared within the retry
+  budget) leave every served answer **bitwise identical** to the
+  fault-free run;
+* faults it cannot absorb trip the feed's **circuit breaker**: the feed
+  is quarantined (stale-served or dropped with exact accounting — served
+  + degraded + dropped partitions the ingested frames, no frame served
+  twice), the healthy fleet keeps its bitwise outputs, and a recovered
+  feed replays from its last snapshot back to the exactly-once frontier;
+* a genuinely stuck server **names the stuck work** instead of spinning
+  (the ``ExtractStallError`` watchdog).
+"""
+import numpy as np
+import pytest
+
+from repro.data import TollBoothStream, VolleyballStream
+from repro.faults import (
+    CLOSED,
+    HALF_OPEN,
+    NULL_FAULTS,
+    OPEN,
+    CircuitBreaker,
+    ExtractFaultError,
+    ExtractStallError,
+    FaultInjector,
+    FaultRule,
+    RetryPolicy,
+    resolve_faults,
+)
+from repro.queries import get_query
+from repro.scheduler import Feed, MultiStreamRuntime, SharedExtractServer
+from repro.semantic import GateConfig, SemanticGate
+from repro.streaming.operators import OpContext
+
+
+@pytest.fixture(scope="module")
+def ctx(stream_ctx):
+    return stream_ctx
+
+
+# ---------------------------------------------------------------------------
+# schedule / injector unit tests (model-free)
+# ---------------------------------------------------------------------------
+
+def test_fault_rule_schedule_arithmetic():
+    r = FaultRule(site="forward", kind="error", feed="a",
+                  start=2, every=3, count=2)
+    hits = [e for e in range(20) if r.matches("forward", "a", "big", e)]
+    assert hits == [2, 5]                 # start, start+every, count-capped
+    assert not r.matches("forward", "b", "big", 2)       # feed filter
+    assert not r.matches("source", "a", "", 2)           # site filter
+    rv = FaultRule(site="forward", kind="error", variant="small")
+    assert rv.matches("forward", "x", "small", 0)
+    assert not rv.matches("forward", "x", "big", 0)
+    with pytest.raises(AssertionError):
+        FaultRule(site="source", kind="error")           # kind/site mismatch
+
+
+def test_injector_pure_and_deterministic():
+    rules = [FaultRule(site="forward", kind="error", p=0.5, param=2)]
+    a, b = FaultInjector(rules, seed=9), FaultInjector(rules, seed=9)
+    # fault_at is pure: same (event, attempt) -> same answer, any order
+    pattern = [a.fault_at("forward", "f", "big", e) for e in range(32)]
+    assert pattern == [b.fault_at("forward", "f", "big", e)
+                       for e in reversed(range(32))][::-1]
+    assert any(p is not None for p in pattern)
+    assert any(p is None for p in pattern)
+    # a different seed draws a different p<1 pattern
+    c = FaultInjector(rules, seed=10)
+    assert pattern != [c.fault_at("forward", "f", "big", e)
+                       for e in range(32)]
+    # event counters are per (site, feed); peek does not consume
+    assert a.peek_event("source", "f") == 0
+    assert a.next_event("source", "f") == 0
+    assert a.next_event("source", "f") == 1
+    assert a.next_event("source", "g") == 0
+    assert a.peek_event("source", "f") == 2
+    # firing logs; fault_at never does
+    a.fire("forward", "f", "big",
+           next(e for e, p in enumerate(pattern) if p is not None))
+    assert len(a.log) == 1 and a.log[0]["site"] == "forward"
+
+
+def test_attempt_clearing_models_transient_faults():
+    inj = FaultInjector([FaultRule(site="forward", kind="error",
+                                   param=2)], seed=0)
+    assert inj.fault_at("forward", "f", "big", 0, attempt=0) is not None
+    assert inj.fault_at("forward", "f", "big", 0, attempt=1) is not None
+    assert inj.fault_at("forward", "f", "big", 0, attempt=2) is None
+
+
+def test_transport_corruption_detectable_and_reversible():
+    inj = FaultInjector([FaultRule(site="source", kind="corrupt",
+                                   param=1)], seed=0)
+    frames = np.arange(2 * 3 * 4 * 4, dtype=np.uint8).reshape(2, 3, 4, 4)
+    pristine = frames.copy()
+    bad = inj.transport("f", frames, event=0, attempt=0)
+    assert not inj.delivered_ok(bad)            # always detectable
+    assert np.array_equal(frames, pristine)     # stream data untouched
+    ok = inj.transport("f", frames, event=0, attempt=1)   # fault cleared
+    assert inj.delivered_ok(ok)
+    assert ok is frames                         # pristine, bitwise, free
+    # float frames are poisoned in-dtype
+    ff = np.ones((1, 3, 4, 4), np.float32)
+    assert not inj.delivered_ok(inj.transport("f", ff, event=0))
+
+
+def test_null_faults_inert_and_resolution_order():
+    assert not NULL_FAULTS.enabled
+    assert NULL_FAULTS.fault_at("forward", "f", "big", 0) is None
+    assert NULL_FAULTS.next_event("source", "f") == 0
+    assert NULL_FAULTS.next_event("source", "f") == 0    # stateless
+    inj = FaultInjector(seed=1)
+    assert resolve_faults(None, inj) is inj
+    assert resolve_faults(inj, FaultInjector(seed=2)) is inj
+    assert resolve_faults(None, None) is NULL_FAULTS
+
+
+def test_retry_policy_backoff_is_exponential():
+    rp = RetryPolicy(max_attempts=4, backoff_base=2)
+    assert [rp.backoff_rounds(a) for a in (1, 2, 3)] == [2, 4, 8]
+
+
+def test_circuit_breaker_lifecycle():
+    br = CircuitBreaker(cooldown=2, max_cooldown=8)
+    assert br.closed and br.state == CLOSED
+    br.trip("ingest dead")
+    br.trip("ingest dead")                       # idempotent while open
+    assert br.state == OPEN and br.counters["trips"] == 1
+    assert br.last_reason == "ingest dead"
+    br.tick()
+    assert br.state == OPEN                      # cooldown not elapsed
+    br.tick()
+    assert br.state == HALF_OPEN and br.should_probe
+    br.probe_failed()
+    assert br.state == OPEN and br.cooldown == 4     # doubled
+    br.probe_failed()
+    br.probe_failed()
+    assert br.cooldown == 8                      # capped at max_cooldown
+    for _ in range(br.cooldown):
+        br.tick()
+    assert br.state == HALF_OPEN
+    br.close()
+    assert br.closed and br.cooldown == 2        # reset on recovery
+    assert br.counters["recoveries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# server-level fault handling (models required)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_server_retries_transient_forward_fault_bitwise(ctx):
+    frames = TollBoothStream(seed=3).batch(4)[0].astype(np.float32)
+    clean = SharedExtractServer(ctx, max_batch=8)
+    want = clean.submit("big", frames, feed="a")
+    clean.drain()
+
+    inj = FaultInjector([FaultRule(site="forward", kind="error",
+                                   param=1)], seed=0)
+    srv = SharedExtractServer(ctx, max_batch=8, faults=inj)
+    req = srv.submit("big", frames, feed="a")
+    srv.drain()
+    assert req.done and not req.failed
+    assert srv.stats["forward_faults"] == 1
+    assert srv.stats["retries"] == 1
+    for task in ("present", "color", "plate"):
+        assert np.array_equal(req.result[task], want.result[task])
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_server_exhausts_retry_budget_and_fails_request(ctx):
+    inj = FaultInjector([FaultRule(site="forward", kind="error",
+                                   feed="sick", param=99)], seed=0)
+    srv = SharedExtractServer(ctx, max_batch=8, faults=inj,
+                              retry=RetryPolicy(max_attempts=2))
+    frames = TollBoothStream(seed=3).batch(2)[0].astype(np.float32)
+    sick = srv.submit("big", frames, feed="sick")
+    well = srv.submit("big", frames, feed="well")
+    srv.drain()                       # terminates: the request goes terminal
+    assert sick.failed and not sick.done
+    with pytest.raises(ExtractFaultError):
+        sick.result
+    assert well.done and not well.failed
+    assert srv.stats["retry_exhausted"] == 1
+    assert srv.stats["forward_faults"] == 2          # both attempts
+    assert srv.pending_requests() == 0               # counters settled
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_server_injected_latency_is_bitwise_and_clock_free(ctx):
+    frames = TollBoothStream(seed=3).batch(3)[0].astype(np.float32)
+    clean = SharedExtractServer(ctx, max_batch=8)
+    want = clean.submit("big", frames, feed="a")
+    clean.drain()
+
+    inj = FaultInjector([FaultRule(site="forward", kind="latency",
+                                   param=3)], seed=0)
+    srv = SharedExtractServer(ctx, max_batch=8, faults=inj)
+    req = srv.submit("big", frames, feed="a")
+    srv.dispatch()
+    # the completion is observed exactly param polls late
+    assert srv.poll() == 0 and srv.poll() == 0 and srv.poll() == 0
+    srv._inflight[0].block()
+    assert srv.poll() == 1
+    assert srv.stats["latency_faults"] == 1
+    for task in ("present", "color", "plate"):
+        assert np.array_equal(req.result[task], want.result[task])
+
+
+def test_watchdog_names_stuck_work():
+    # model-free: a queued request that can never launch (backoff pinned
+    # into the far future) must be *named*, not spun on forever
+    srv = SharedExtractServer(OpContext(), max_batch=8,
+                              drain_timeout_s=0.0)
+    req = srv.submit("big", np.zeros((2, 3, 8, 8), np.float32), feed="a")
+    req.not_before = 10 ** 9
+    with pytest.raises(ExtractStallError, match="feed='a'"):
+        srv.drain()
+    with pytest.raises(ExtractStallError, match="drain\\(\\)"):
+        srv.drain()
+
+
+# ---------------------------------------------------------------------------
+# runtime-level chaos contracts (models required)
+# ---------------------------------------------------------------------------
+
+def _feeds():
+    return [
+        Feed("tb0", TollBoothStream(seed=42),
+             [get_query("Q2").naive_plan()]),
+        Feed("vb0", VolleyballStream(seed=5),
+             [get_query("Q12").naive_plan()]),
+    ]
+
+
+def _outputs(res, feed):
+    return {q: r.outputs for q, r in res.feeds[feed].per_query.items()}
+
+
+@pytest.fixture(scope="module")
+def plain48(ctx):
+    """The fault-free reference run every chaos contract diffs against."""
+    return MultiStreamRuntime(_feeds(), ctx, micro_batch=8).run(48)
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_null_faults_run_bitwise_identical(ctx, plain48):
+    res = MultiStreamRuntime(_feeds(), ctx, micro_batch=8,
+                             faults=NULL_FAULTS).run(48)
+    for f in ("tb0", "vb0"):
+        assert _outputs(res, f) == _outputs(plain48, f)
+        for q, r in res.feeds[f].per_query.items():
+            assert r.window_results == \
+                plain48.feeds[f].per_query[q].window_results
+        assert res.feeds[f].degraded == 0 and res.feeds[f].dropped == 0
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_absorbed_faults_keep_outputs_bitwise(ctx, plain48):
+    # transient forward errors (cleared on retry), injected device
+    # latency, source stalls and recoverable corrupt deliveries — all
+    # absorbed, all bitwise
+    inj = FaultInjector(seed=3, rules=[
+        FaultRule(site="forward", kind="error", feed="tb0",
+                  start=1, every=3, count=2, param=1),
+        FaultRule(site="forward", kind="latency", start=0, every=4,
+                  count=3, param=2),
+        FaultRule(site="source", kind="stall", feed="vb0",
+                  start=1, every=2, count=3),
+        FaultRule(site="source", kind="corrupt", feed="vb0",
+                  start=4, every=3, count=2, param=1),
+    ])
+    res = MultiStreamRuntime(_feeds(), ctx, micro_batch=8,
+                             faults=inj).run(48)
+    for f in ("tb0", "vb0"):
+        assert _outputs(res, f) == _outputs(plain48, f)
+        assert res.feeds[f].served == 48
+        assert res.feeds[f].breaker["trips"] == 0
+    assert res.server_stats["retries"] >= 1
+    assert res.server_stats["latency_faults"] >= 1
+    assert len(inj.log) >= 4
+    # rerunning the same schedule reproduces the same fault log
+    inj2 = FaultInjector(seed=3, rules=list(inj.rules))
+    res2 = MultiStreamRuntime(_feeds(), ctx, micro_batch=8,
+                              faults=inj2).run(48)
+    assert inj2.log == inj.log
+    for f in ("tb0", "vb0"):
+        assert _outputs(res2, f) == _outputs(res, f)
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_dead_source_trips_breaker_with_exact_accounting(ctx, plain48):
+    inj = FaultInjector(seed=11, rules=[
+        FaultRule(site="source", kind="corrupt", feed="tb0",
+                  start=1, every=1, param=99)])
+    res = MultiStreamRuntime(_feeds(), ctx, micro_batch=8,
+                             faults=inj).run(48)
+    tb = res.feeds["tb0"]
+    # quarantined: the breaker tripped, the run still terminated
+    assert tb.breaker["trips"] == 1
+    # exact partition, nothing served twice, nothing silently lost
+    assert tb.served + tb.degraded + tb.dropped == 48
+    assert tb.served > 0                  # the pre-fault prefix was served
+    served_idx = sorted(r["idx"] for r in
+                        res.feeds["tb0"].per_query["Q2"].outputs)
+    assert len(served_idx) == len(set(served_idx)) == tb.served
+    # the served prefix is bitwise the fault-free prefix
+    want = _outputs(plain48, "tb0")
+    got = _outputs(res, "tb0")
+    for q in want:
+        assert got[q] == want[q][:len(got[q])]
+    # the healthy feed never noticed
+    assert _outputs(res, "vb0") == _outputs(plain48, "vb0")
+    assert res.feeds["vb0"].served == 48
+    assert res.feeds["vb0"].breaker["trips"] == 0
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_bounded_outage_probes_replays_and_recovers(ctx, plain48):
+    # corruption spans two source events, then clears: the breaker must
+    # probe after cooldown, replay from the snapshot and serve the rest
+    # of the stream bitwise
+    inj = FaultInjector(seed=11, rules=[
+        FaultRule(site="source", kind="corrupt", feed="tb0",
+                  start=1, every=1, count=2, param=99)])
+    res = MultiStreamRuntime(_feeds(), ctx, micro_batch=8, faults=inj,
+                             breaker_cooldown=1).run(48)
+    tb = res.feeds["tb0"]
+    assert tb.breaker["trips"] == 1
+    assert tb.breaker["recoveries"] >= 1
+    assert tb.served + tb.degraded + tb.dropped == 48
+    assert tb.dropped + tb.degraded <= 24      # outage, not the whole run
+    # every served answer (before and after the outage) matches the
+    # fault-free run at the same frame index; no frame appears twice
+    want = {(q, r["idx"]): r for q, outs in _outputs(plain48,
+                                                     "tb0").items()
+            for r in outs}
+    seen = set()
+    for q, outs in _outputs(res, "tb0").items():
+        for r in outs:
+            assert want[(q, r["idx"])] == r
+            assert (q, r["idx"]) not in seen
+            seen.add((q, r["idx"]))
+    assert _outputs(res, "vb0") == _outputs(plain48, "vb0")
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_gated_outage_serves_stale_keyframe_answers(ctx):
+    # with the semantic gate live, a quarantined feed degrades to its
+    # newest keyframe answer — marked stale, never silently wrong
+    gate = SemanticGate(GateConfig(threshold=0.12,
+                                   revalidate_every=1000))
+    inj = FaultInjector(seed=7, rules=[
+        FaultRule(site="source", kind="corrupt", feed="tb0",
+                  start=2, every=1, param=99)])
+    res = MultiStreamRuntime(_feeds(), ctx, micro_batch=8, faults=inj,
+                             gate=gate, pipelined=False).run(48)
+    tb = res.feeds["tb0"]
+    assert tb.served + tb.degraded + tb.dropped == 48
+    assert tb.degraded > 0
+    assert len(tb.degraded_records) == tb.degraded
+    for d in tb.degraded_records:
+        assert d["stale"] is True and d["answer"]
+    # degraded frames never leak into the served outputs
+    served_idx = {r["idx"] for r in
+                  res.feeds["tb0"].per_query["Q2"].outputs}
+    assert served_idx.isdisjoint(d["idx"] for d in tb.degraded_records)

@@ -468,3 +468,59 @@ def test_multistream_snapshot_restore_bitwise(ctx, gated):
             assert [o for o in rq.outputs if "window" not in o] == \
                 [o for o in fq.outputs
                  if "window" not in o and o["idx"] >= 48]
+
+
+def test_multistream_snapshot_mid_pipelined_flight_bitwise(ctx):
+    """snapshot() taken while forwards are genuinely outstanding: the
+    drain barrier must run the in-flight continuations to completion and
+    fold them into the checkpoint, so a restore continues bitwise — the
+    aligned-checkpoint claim under pipelined serving, not just at the
+    quiescent end-of-run boundary the other round-trip tests use."""
+    from repro.scheduler import MultiStreamRuntime
+
+    def runtime():
+        return MultiStreamRuntime(_ms_snapshot_feeds(), ctx,
+                                  micro_batch=16)
+
+    full = runtime().run(96)
+
+    seg = runtime()
+    seg.run(32)
+    # hand-inject the next micro-batch on every feed and dispatch, so the
+    # snapshot lands with suspended continuations parked at the server
+    # and forwards on the device — mid-flight, not drained
+    for fs in seg._feeds:
+        frames, _ = fs.feed.stream.batch(16)
+        batch = {"frames": frames,
+                 "idx": np.arange(fs.source_index, fs.source_index + 16)}
+        for g in fs.groups:
+            p = g.start(batch)
+            if p is not None:
+                fs.pendings.append((g, p))
+        fs.source_index += 16
+    assert any(fs.pendings for fs in seg._feeds)
+    seg.server.dispatch()
+    assert seg.server.inflight > 0 or seg.server.pending_requests() > 0
+
+    snap = seg.snapshot()                      # the drain barrier
+    assert not any(fs.pendings for fs in seg._feeds)
+    assert snap["feeds"]["tb"]["source_index"] == 48
+    assert snap["feeds"]["vb"]["source_index"] == 48
+
+    rt2 = runtime()
+    rt2.restore(snap)
+    for fs in rt2._feeds:                      # replay to the offset
+        fs.feed.stream.batch(48)
+    resumed = rt2.run(48)                      # warmup suppressed
+
+    # the restored continuation is exactly the uninterrupted run's tail:
+    # outputs and every window spanning the mid-flight batch included
+    for feed in ("tb", "vb"):
+        for qid, rq in resumed.feeds[feed].per_query.items():
+            fq = full.feeds[feed].per_query[qid]
+            k = len(rq.window_results)
+            if k:
+                assert rq.window_results == fq.window_results[-k:]
+            assert [o for o in rq.outputs if "window" not in o] == \
+                [o for o in fq.outputs
+                 if "window" not in o and o["idx"] >= 48]
