@@ -1,0 +1,143 @@
+"""Benchmark history & comparison: the perf-trajectory substrate.
+
+``benchmarks/run.py --json DIR`` writes one ``BENCH_<section>.json`` per
+section, each row stamped with host provenance (cpu count, platform,
+python, jax backend/devices/version).  This module turns those
+per-run snapshots into a trajectory:
+
+  * ``append_history`` folds a run's rows into a JSONL history file
+    (one line per run, keyed by host provenance), so successive runs on
+    the same machine accumulate instead of overwriting;
+  * ``compare`` diffs two row sets with a *noise-aware* policy — rows
+    sharing a name are collapsed to their best value (min for
+    lower-is-better metrics, max for higher-is-better: the min-of-trials
+    convention every serious benchmark harness uses, because scheduling
+    noise only ever makes numbers worse) before ratios are taken;
+  * ``direction`` is the metric-name heuristic deciding which way
+    "better" points; names it cannot classify are skipped rather than
+    guessed (a gate that misreads a counter as a latency would cry wolf
+    forever).
+
+``scripts/bench_gate.py`` is the CLI consumer: it compares the current
+``reports/benchmarks`` rows against the committed
+``reports/benchmarks/baseline`` snapshot per host key and exits nonzero
+on regression.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+#: substrings marking a higher-is-better metric (checked first)
+_HIGHER = ("fps", "speedup", "throughput", "hit_rate", "attainment",
+           "availability")
+#: suffix / substring cues for lower-is-better (latencies, walls, model
+#: load); counts of forwards are model load — fewer forwards per frame
+#: is the paper's headline win
+_LOWER_SUFFIX = ("_ms", "_us", "_s", "_ns")
+_LOWER = ("latency", "serving", "forwards", "wall", "us_per_call",
+          "mllm_frames", "stale")
+
+
+def direction(name: str) -> Optional[int]:
+    """+1 higher-is-better, -1 lower-is-better, None unknown (skip)."""
+    low = name.lower()
+    if any(h in low for h in _HIGHER):
+        return +1
+    if low.endswith(_LOWER_SUFFIX) or any(l in low for l in _LOWER):
+        return -1
+    return None
+
+
+def host_key(row: Dict[str, Any]) -> str:
+    """Provenance key: perf numbers only compare within one of these."""
+    return "|".join(str(row.get(k, "?")) for k in (
+        "host_platform", "host_cpus", "host_python", "jax_backend",
+        "jax_version"))
+
+
+def load_bench_dir(path: str) -> List[Dict[str, Any]]:
+    """All rows from every ``BENCH_*.json`` under ``path`` (sections
+    that failed contribute nothing — an ERROR row has no numeric
+    metric and would be skipped anyway, but ``ok: false`` sections are
+    dropped outright so a crashed section can't half-compare)."""
+    rows: List[Dict[str, Any]] = []
+    for fp in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
+        with open(fp) as f:
+            data = json.load(f)
+        if not data.get("ok", True):
+            continue
+        for r in data.get("rows", []):
+            r = dict(r)
+            r["section"] = data.get("section", "")
+            rows.append(r)
+    return rows
+
+
+def append_history(bench_dir: str, history_path: str) -> int:
+    """Append one JSONL record (this run's rows, grouped under their
+    host key) to the history file; returns the number of rows kept."""
+    rows = [r for r in load_bench_dir(bench_dir)
+            if isinstance(r.get("metric"), (int, float))]
+    if not rows:
+        return 0
+    rec = {
+        "written_at": time.time(),
+        "host_key": host_key(rows[0]),
+        "rows": [{"section": r["section"], "name": r["name"],
+                  "metric": r["metric"]} for r in rows],
+    }
+    d = os.path.dirname(history_path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(history_path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return len(rows)
+
+
+def best_by_name(rows: List[Dict[str, Any]]
+                 ) -> Dict[str, Tuple[float, int]]:
+    """Collapse trials: name → (best metric, direction).  Non-numeric
+    metrics and direction-less names drop here."""
+    best: Dict[str, Tuple[float, int]] = {}
+    for r in rows:
+        m = r.get("metric")
+        if not isinstance(m, (int, float)):
+            continue
+        d = direction(r["name"])
+        if d is None:
+            continue
+        prev = best.get(r["name"])
+        if prev is None or (d > 0 and m > prev[0]) \
+                or (d < 0 and m < prev[0]):
+            best[r["name"]] = (float(m), d)
+    return best
+
+
+def compare(baseline: List[Dict[str, Any]], current: List[Dict[str, Any]],
+            tolerance: float = 0.5) -> List[Dict[str, Any]]:
+    """Per-metric deltas between two row sets (already host-matched).
+
+    Each delta row: name, baseline, current, ratio (current/baseline,
+    oriented so >1 means *worse*), regressed (ratio beyond
+    ``1 + tolerance``).  Metrics present on only one side are skipped —
+    a new benchmark must not fail the gate on its first run."""
+    b_best = best_by_name(baseline)
+    c_best = best_by_name(current)
+    out: List[Dict[str, Any]] = []
+    for name in sorted(set(b_best) & set(c_best)):
+        b, d = b_best[name]
+        c, _ = c_best[name]
+        if b <= 0 or c <= 0:
+            continue                      # ratios need positive metrics
+        worse = c / b if d < 0 else b / c
+        out.append({
+            "name": name, "baseline": b, "current": c,
+            "direction": "higher" if d > 0 else "lower",
+            "ratio": worse,
+            "regressed": worse > 1.0 + tolerance,
+        })
+    return out

@@ -104,7 +104,14 @@ def main() -> None:
                          "ones); the CI smoke tier uses this")
     ap.add_argument("--json", metavar="DIR", default=None,
                     help="also write BENCH_<section>.json files to DIR")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="after a fully-successful run, copy this run's "
+                         "BENCH_*.json into DIR/baseline/ — the anchor "
+                         "scripts/bench_gate.py compares against "
+                         "(requires --json)")
     args = ap.parse_args()
+    assert not args.write_baseline or args.json, \
+        "--write-baseline needs --json DIR"
 
     wanted = args.sections.split(",") if args.sections else None
     known = {"kernels", "serving", "samsara", "fig_semantic", "fig_fused",
@@ -170,6 +177,26 @@ def main() -> None:
                            "ok": name not in failed,
                            "rows": [_structured(r) for r in rows]},
                           f, indent=1)
+    if args.json:
+        # perf trajectory: every --json run appends its rows (host-keyed)
+        # to the JSONL history riding next to the snapshots
+        from benchmarks.history import append_history
+
+        kept = append_history(args.json,
+                              os.path.join(args.json, "history.jsonl"))
+        print(f"history: {kept} rows appended to "
+              f"{os.path.join(args.json, 'history.jsonl')}",
+              file=sys.stderr)
+    if args.write_baseline and not failed:
+        import shutil
+
+        bdir = os.path.join(args.json, "baseline")
+        os.makedirs(bdir, exist_ok=True)
+        for name, _ in sections:
+            src = os.path.join(args.json, f"BENCH_{name}.json")
+            if os.path.exists(src):
+                shutil.copy2(src, bdir)
+        print(f"baseline refreshed under {bdir}", file=sys.stderr)
     if failed:
         print(f"FAILED sections: {', '.join(failed)}", file=sys.stderr)
         sys.exit(1)

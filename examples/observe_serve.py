@@ -26,6 +26,13 @@ measured by ``benchmarks/samsara_bench.py fig_pipeline`` sits near 1×
 here (overlap is contention-bound); on a real accelerator the forward
 spans move off-host and the same trace shows the overlap opening up.
 
+The walkthrough ends with the audit loop: the sharing-tree planner's
+per-decision predicted costs joined against what serving measured
+(device-probed ``forward_device_ms`` vs the poll-quantized observed
+span, per-op walls), drift flags, and a markdown flight report at
+``reports/flight_report.md`` that ``scripts/bench_gate.py`` appends its
+bench deltas to in CI.
+
   PYTHONPATH=src python examples/observe_serve.py [--frames 128] [--quick]
 """
 import argparse
@@ -33,7 +40,8 @@ import os
 import time
 
 from repro.data import TollBoothStream, VolleyballStream
-from repro.obs import PHASES, Observability
+from repro.obs import (PHASES, Observability, forward_gap,
+                       write_flight_report)
 from repro.queries import get_query
 from repro.scheduler import Feed, MultiStreamRuntime, SharedExtractServer
 from repro.semantic import GateConfig, SemanticGate
@@ -55,8 +63,12 @@ def _make_stream(dataset: str, seed: int):
 
 
 def _run(ctx, frames: int, obs=None):
-    """One gated, pipelined serving run over fresh streams/runtimes."""
+    """One gated, pipelined serving run over fresh streams/runtimes;
+    returns (runtime, result) so callers can audit the plan."""
     import dataclasses
+
+    from repro.core.costs import CostCatalog
+    from repro.scheduler.sharing_tree import SharingTreePlanner
 
     if obs is not None:
         ctx = dataclasses.replace(ctx, obs=obs)
@@ -64,8 +76,12 @@ def _run(ctx, frames: int, obs=None):
                   [get_query(qid).naive_plan() for qid in qids])
              for name, ds, seed, qids in FEEDS]
     gate = SemanticGate(GateConfig(threshold=0.06))
-    ms = MultiStreamRuntime(feeds, ctx, micro_batch=16, gate=gate)
-    return ms.run(frames)
+    # a catalog-backed planner closes the audit loop: end-of-run
+    # reconcile EMA-feeds measured costs + gate hit rates back into it
+    planner = SharingTreePlanner(catalog=CostCatalog(), micro_batch=16)
+    ms = MultiStreamRuntime(feeds, ctx, micro_batch=16, gate=gate,
+                            planner=planner)
+    return ms, ms.run(frames)
 
 
 def _overhead_bound(wall_s: float, frames: int) -> float:
@@ -103,7 +119,7 @@ def main() -> None:
     print(f"\n=== observed serving: {len(FEEDS)} feeds × "
           f"{args.frames} frames (gated, pipelined) ===")
     obs = Observability(slo_target_ms=250.0)
-    observed = _run(ctx, args.frames, obs=obs)
+    ms, observed = _run(ctx, args.frames, obs=obs)
 
     print("\nper-feed SLO accounting "
           f"(target {obs.slo.target_ms:.0f}ms frame latency):")
@@ -119,6 +135,35 @@ def main() -> None:
     print(f"device forwards: n={qw.count} p50={qw.percentile(50):.1f}ms "
           f"p95={qw.percentile(95):.1f}ms")
 
+    # the audit loop: planner decisions joined against what serving
+    # actually measured (device-probed forwards, per-op walls), drift
+    # beyond tolerance flagged and EMA-fed back into the cost catalog
+    audit = ms.audit()
+    print("\nper-decision audit (predicted vs measured, µs/frame):")
+    print(audit.table(obs.metrics))
+    gap = forward_gap(obs.metrics)
+    if gap is not None:
+        print(f"\nforward timing: observed {gap['observed_ms']:.1f}ms vs "
+              f"device-probed {gap['device_ms']:.1f}ms mean — "
+              f"{gap['gap_frac']:.0%} of the observed span is poll "
+              f"latency, not device time ({gap['probes']} probes / "
+              f"{gap['forwards']} forwards)")
+    if ms.drift_flags:
+        print(f"cost-model drift flags (catalog EMA-corrected): "
+              f"{', '.join(ms.drift_flags)}")
+
+    report_path = write_flight_report(
+        os.path.join("reports", "flight_report.md"),
+        slo=obs.slo, audit=audit, metrics=obs.metrics,
+        flagged=ms.drift_flags,
+        notes=[f"{len(FEEDS)} feeds × {args.frames} frames, "
+               "gated + pipelined, quick models"
+               if args.quick else
+               f"{len(FEEDS)} feeds × {args.frames} frames, "
+               "gated + pipelined"])
+    print(f"\nwrote {report_path} (SLO + audit + drift flags; the CI "
+          "bench gate appends its deltas to the same file)")
+
     os.makedirs("reports", exist_ok=True)
     n_events = obs.tracer.export_chrome(TRACE_PATH)
     cats = {e["cat"] for e in obs.tracer.events()}
@@ -131,7 +176,7 @@ def main() -> None:
 
     print(f"\n=== unobserved rerun (NULL_OBS) — the no-overhead "
           f"contract ===")
-    baseline = _run(ctx, args.frames)
+    _, baseline = _run(ctx, args.frames)
     same = all(
         observed.feeds[name].per_query[qid].outputs
         == baseline.feeds[name].per_query[qid].outputs

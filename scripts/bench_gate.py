@@ -1,0 +1,121 @@
+"""CI bench gate: compare current BENCH rows against the committed baseline.
+
+  PYTHONPATH=src python scripts/bench_gate.py \\
+      [--baseline reports/benchmarks/baseline] \\
+      [--current reports/benchmarks] [--tolerance 0.5] \\
+      [--warn-only] [--report reports/flight_report.md]
+
+Rows compare per host-provenance key (``benchmarks.history.host_key``):
+only the baseline rows whose host matches the current run gate hard —
+perf numbers from a different machine are rendered for context but
+flagged as cross-host and never fail the build (they still warn, so a
+grossly wrong trajectory is visible even when CI hardware rotated).
+
+Noise policy: trials collapse to best-of (min for lower-is-better), and
+the tolerance is deliberately loose by default (50% — shared CI runners
+jitter hugely); the gate is for 2×-class regressions, the flight report
+carries the precise numbers.
+
+Exit status: 0 when nothing regressed (or ``--warn-only``), 1 on a
+same-host regression, 2 on usage errors (missing baseline dir).
+``--report`` appends a "## Bench deltas" markdown section to the flight
+report so one artifact carries SLO + audit + perf trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.history import compare, host_key, load_bench_dir  # noqa: E402
+
+
+def _render_markdown(deltas, cross_host: bool) -> str:
+    lines = ["## Bench deltas", ""]
+    if cross_host:
+        lines += ["> baseline was produced on a different host — deltas "
+                  "are context, not gated", ""]
+    if not deltas:
+        lines += ["no comparable metrics between baseline and current "
+                  "run", ""]
+        return "\n".join(lines)
+    lines += ["| metric | baseline | current | worse-by | status |",
+              "|---|---:|---:|---:|---|"]
+    for d in deltas:
+        status = "**REGRESSED**" if d["regressed"] else "ok"
+        lines.append(
+            f"| {d['name']} ({d['direction']} better) "
+            f"| {d['baseline']:.4g} | {d['current']:.4g} "
+            f"| {d['ratio']:.2f}x | {status} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="compare BENCH_*.json against the committed baseline")
+    ap.add_argument("--baseline", default="reports/benchmarks/baseline")
+    ap.add_argument("--current", default="reports/benchmarks")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed relative worsening before a metric "
+                         "counts as regressed (0.5 = 50%%)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0 (first-PR mode)")
+    ap.add_argument("--report", metavar="MD", default=None,
+                    help="append a '## Bench deltas' section to this "
+                         "markdown file")
+    args = ap.parse_args()
+
+    if not os.path.isdir(args.baseline):
+        print(f"bench_gate: baseline dir {args.baseline!r} missing — "
+              "seed it with benchmarks/run.py --write-baseline",
+              file=sys.stderr)
+        sys.exit(2)
+    baseline = load_bench_dir(args.baseline)
+    current = load_bench_dir(args.current)
+    if not current:
+        print(f"bench_gate: no BENCH_*.json under {args.current!r} — "
+              "run benchmarks/run.py --json first", file=sys.stderr)
+        sys.exit(2)
+
+    cur_keys = {host_key(r) for r in current}
+    matched = [r for r in baseline if host_key(r) in cur_keys]
+    cross_host = not matched
+    if cross_host:
+        print("bench_gate: WARNING — no baseline rows share this host's "
+              "provenance key; comparing cross-host (warn-only for these "
+              "deltas)", file=sys.stderr)
+        matched = baseline
+
+    deltas = compare(matched, current, tolerance=args.tolerance)
+    regressed = [d for d in deltas if d["regressed"]]
+    for d in deltas:
+        tag = "REGRESSED" if d["regressed"] else "ok"
+        print(f"{tag:>9}  {d['name']:<40} baseline={d['baseline']:.4g} "
+              f"current={d['current']:.4g} worse-by={d['ratio']:.2f}x "
+              f"({d['direction']} is better)")
+    if not deltas:
+        print("bench_gate: no comparable metrics (nothing gated)")
+
+    if args.report:
+        os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+        with open(args.report, "a") as f:
+            if f.tell():
+                f.write("\n")
+            f.write(_render_markdown(deltas, cross_host))
+        print(f"bench_gate: deltas appended to {args.report}")
+
+    if regressed:
+        print(f"bench_gate: {len(regressed)} metric(s) regressed beyond "
+              f"{args.tolerance:.0%} tolerance", file=sys.stderr)
+        if not (args.warn_only or cross_host):
+            sys.exit(1)
+        print("bench_gate: warn-only — not failing the build",
+              file=sys.stderr)
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

@@ -135,6 +135,50 @@ class CostCatalog:
         else:
             self.gate_hit_rates[feed] = rate
 
+    def reconcile(self, measured: Dict[str, Dict[str, float]],
+                  tolerance: float = 0.5) -> List[str]:
+        """Fold *serving-time* measurements back into the catalog — the
+        audit loop's write path, mirroring ``record_gate_hit_rate``:
+        predictions that drift from reality are EMA-pulled toward what
+        the last run actually measured, so the next planning pass
+        self-corrects instead of compounding a stale calibration.
+
+        ``measured`` maps catalog key → ``{"us": marginal µs/frame,
+        "overhead_us"?: per-invocation µs, "pass_rate"?: survivor
+        fraction, "frames"?: sample weight}``.  Unlike ``record``, this
+        deliberately bypasses the direct-outranks-run protection: a
+        measurement taken *under serving conditions* (real batches, real
+        interleaving, device-probed forwards) is better ground truth for
+        planning than an offline micro-benchmark, however directly that
+        was timed.  Keys without a prior entry are created outright.
+
+        Returns the keys whose prior marginal cost was off by more than
+        ``tolerance`` (relative, both directions) — the drift flags the
+        flight report surfaces."""
+        flagged: List[str] = []
+        for key, m in measured.items():
+            us = float(m["us"])
+            if us < 0 or not np.isfinite(us):
+                continue
+            e = self.entries.get(key)
+            if e is None:
+                self.entries[key] = CostEntry(
+                    us=us, pass_rate=float(m.get("pass_rate", 1.0)),
+                    overhead_us=float(m.get("overhead_us", 0.0)),
+                    direct=False)
+                continue
+            if e.us > us * (1 + tolerance) or us > e.us * (1 + tolerance):
+                flagged.append(key)
+            e.us = (1 - EMA) * e.us + EMA * us
+            if "pass_rate" in m:
+                e.pass_rate = (1 - EMA) * e.pass_rate \
+                    + EMA * float(m["pass_rate"])
+            if "overhead_us" in m:
+                e.overhead_us = (1 - EMA) * e.overhead_us \
+                    + EMA * float(m["overhead_us"])
+            e.n += 1
+        return flagged
+
     def mean_gate_hit_rate(self) -> float:
         """Workload-level hit rate the planner discounts extract costs
         by; 0 until a gated run has been measured."""

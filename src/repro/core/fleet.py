@@ -116,6 +116,15 @@ class FleetResult:
     naive_plans: Dict[str, Plan] = dataclasses.field(default_factory=dict)
     feed_keys: Dict[str, List[str]] = dataclasses.field(default_factory=dict)
 
+    def audit(self, tolerance: float = 0.5):
+        """A ``repro.obs.audit.PlanAudit`` over this result's forests and
+        optimization reports — join with a served run's metrics for the
+        predicted-vs-measured decision table, or call
+        ``verify_predictions()`` to check the stored costs still derive
+        from the catalog."""
+        from repro.obs.audit import PlanAudit
+        return PlanAudit.from_fleet(self, tolerance=tolerance)
+
     def describe(self) -> str:
         lines = ["=== fleet optimization ==="]
         lines += [f"  {d}" for d in self.decisions]

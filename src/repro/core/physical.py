@@ -216,6 +216,10 @@ class PhysicalOptimizer:
         fused_us = _chain_cost_us([cand], n)
         info = {"segment": [o.name for o in seg], "batch": n,
                 "fused_us": fused_us, "unfused_us": unfused_us,
+                # fitted T(n) terms, so the audit layer can re-price the
+                # decision at the batch size serving actually observed
+                "fused_marginal_us": cand.cost_us,
+                "fused_overhead_us": cand.overhead_us,
                 "fused": fused_us <= unfused_us}
         report["fused_prefix"] = info
         if not info["fused"]:

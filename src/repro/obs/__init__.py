@@ -100,8 +100,13 @@ def resolve_obs(*candidates) -> Observability:
     return NULL_OBS
 
 
+# imported after the core surfaces exist: audit/report lazy-import the
+# planner/scheduler layers (which import this package at module scope)
+from repro.obs.audit import PlanAudit, forward_gap          # noqa: E402
+from repro.obs.report import write_flight_report            # noqa: E402
+
 __all__ = [
     "Counter", "Gauge", "Histogram", "Metrics", "NULL_OBS", "NULL_TRACER",
-    "NullTracer", "Observability", "PHASES", "SLOTracker", "Tracer",
-    "resolve_obs",
+    "NullTracer", "Observability", "PHASES", "PlanAudit", "SLOTracker",
+    "Tracer", "forward_gap", "resolve_obs", "write_flight_report",
 ]

@@ -113,6 +113,22 @@ class Histogram:
                 return min(max(mid, self.vmin), self.vmax)
         return self.vmax
 
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold ``other`` into this histogram, bin-exactly: both must share
+        the binning (same ``lo``/``growth``/``nbins``), so summed counts
+        are identical to having recorded the interleaved value stream into
+        one histogram (the property ``tests/test_obs.py`` asserts with
+        hypothesis).  Returns self for chaining."""
+        assert (self.lo, self.growth, self.nbins) == \
+            (other.lo, other.growth, other.nbins), \
+            "merging histograms with different binning"
+        self.counts += other.counts
+        self.count += other.count
+        self.total += other.total
+        self.vmin = min(self.vmin, other.vmin)
+        self.vmax = max(self.vmax, other.vmax)
+        return self
+
     # -- checkpoint state ------------------------------------------------
     def state(self) -> Dict[str, Any]:
         return {"counts": self.counts.copy(), "count": self.count,

@@ -114,11 +114,7 @@ class SLOTracker:
             h = m.histogram(f"frame_latency_ms/{feed}")
             if agg is None:
                 agg = type(h)()
-            agg.counts += h.counts
-            agg.count += h.count
-            agg.total += h.total
-            agg.vmin = min(agg.vmin, h.vmin)
-            agg.vmax = max(agg.vmax, h.vmax)
+            agg.merge(h)
             emitted += m.counter(f"frames_emitted/{feed}").value
             viol += m.counter(f"slo_violations/{feed}").value
         if agg is None:

@@ -29,6 +29,7 @@ the per-phase timeline evidence the latency work needs.
 from __future__ import annotations
 
 import json
+import sys
 import time
 from typing import Any, Dict, List, Optional
 
@@ -185,4 +186,11 @@ class Tracer(NullTracer):
             json.dump({"traceEvents": meta + out,
                        "displayTimeUnit": "ms",
                        "otherData": {"dropped_events": self.dropped}}, f)
+        if self.dropped:
+            # a truncated trace looks complete in Perfetto — say so loudly
+            # instead of burying the count in the otherData blob
+            print(f"WARNING: trace {path} dropped {self.dropped} events "
+                  f"(ring capacity {self.capacity}; oldest overwritten) — "
+                  "raise Tracer(capacity=...) for a complete timeline",
+                  file=sys.stderr)
         return len(out)

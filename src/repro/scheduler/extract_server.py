@@ -78,6 +78,17 @@ the ``device`` track (launch → observed completion) feeding a
 ``forward_ms`` histogram, and ``inflight`` / ``queue_depth`` counter
 samples — the occupancy timeline that shows whether double buffering
 actually overlaps.  Un-observed servers pay only no-op calls.
+
+The observed ``forward`` span is an upper bound on device time — it
+includes however long the runtime took to poll the completion — so every
+``device_probe_every``-th forward is additionally *probed*: the launch
+thread blocks on a one-element sentinel sliced from the output and
+records the launch → device-completion interval as a
+``forward_device[variant]`` span and ``forward_device_ms`` /
+``forward_device_ms/<variant>`` histograms (frames counted in
+``forward_device_frames/<variant>``).  Probed device time is what the
+cost-model reconciliation (``repro.obs.audit``) trusts; sampling keeps
+the probe off the steady-state path.
 """
 from __future__ import annotations
 
@@ -310,7 +321,8 @@ class SharedExtractServer:
     def __init__(self, ctx: OpContext, max_batch: int = 64,
                  max_inflight: int = 2, gate=None, obs=None,
                  faults=None, retry: Optional[RetryPolicy] = None,
-                 drain_timeout_s: float = 120.0):
+                 drain_timeout_s: float = 120.0,
+                 device_probe_every: int = 8):
         assert max_batch >= 1 and max_inflight >= 1
         self.ctx = ctx
         self.max_batch = max_batch
@@ -333,6 +345,16 @@ class SharedExtractServer:
         #: it; a long first compile blocks *inside* the forward and so
         #: never trips it)
         self.drain_timeout_s = drain_timeout_s
+        #: device-accurate forward timing: every Nth launched forward is
+        #: *probed* — a ``block_until_ready`` on a one-element sentinel
+        #: sliced from the forward output, timed launch → device
+        #: completion, so the measurement excludes the poll interval the
+        #: observed ``forward`` span necessarily includes.  Sampling keeps
+        #: steady-state serving free (a probe serializes the host for that
+        #: one forward); 0 disables probing entirely.  Active only with an
+        #: enabled ``Observability`` — the un-observed path never probes.
+        self.device_probe_every = device_probe_every
+        self._probe_seq = 0                   # forwards since last probe
         self._dispatch_seq = 0                # retry backoff clock (rounds)
         self._defers: Dict[Tuple, int] = {}   # bucket key -> deferred calls
         self._fns: Dict[str, Any] = {}
@@ -394,6 +416,12 @@ class SharedExtractServer:
         if self.obs.enabled:
             self.obs.metrics.drop("queue_wait_ms")
             self.obs.metrics.drop("forward_ms")
+            self.obs.metrics.drop("forward_device_ms")
+            self.obs.metrics.drop("forward_device_frames")
+            # realign probe sampling so the first *measured* forward is
+            # probed — a short post-warmup run must not land between
+            # sample points and finish with zero device measurements
+            self._probe_seq = 0
 
     # ------------------------------------------------------------------
     def _fn(self, variant: str):
@@ -615,6 +643,26 @@ class SharedExtractServer:
                     obs.metrics.observe(
                         f"queue_wait_ms/{r.feed}",
                         (fl.t_launch - r.t_submit) / 1e6, r.n)
+            if self.device_probe_every and not delay:
+                # device-accurate forward timing: every Nth forward is
+                # probed — block on a one-element sentinel sliced from
+                # the output, so the launch→completion interval excludes
+                # the poll quantization the observed ``forward`` span
+                # carries.  The probe serializes the host for this one
+                # forward only; un-probed forwards are untouched.
+                if self._probe_seq % self.device_probe_every == 0:
+                    sentinel = next(iter(fl.preds.values()))[:1]
+                    jax.block_until_ready(sentinel)
+                    t_done = obs.now()
+                    tr.span(f"forward_device[{variant}]", "forward",
+                            fl.t_launch, t_done, track="device", n=total)
+                    dev_ms = (t_done - fl.t_launch) / 1e6
+                    obs.metrics.observe("forward_device_ms", dev_ms)
+                    obs.metrics.observe(
+                        f"forward_device_ms/{variant}", dev_ms)
+                    obs.metrics.inc(
+                        f"forward_device_frames/{variant}", total)
+                self._probe_seq += 1
         off = 0
         for r in chunk:
             r._chunk = fl

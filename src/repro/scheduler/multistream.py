@@ -44,6 +44,7 @@ from typing import Any, Dict, List, Optional, Union
 
 import numpy as np
 
+from repro.core.costs import op_cost_key
 from repro.faults import OPEN, CircuitBreaker, resolve_faults
 from repro.scheduler.extract_server import (
     PendingResume,
@@ -211,10 +212,22 @@ class _GroupExec:
             if obs.enabled:
                 t0 = obs.now()
                 batch = broadcast_windows(op.process(batch), self.windows)
+                t1 = obs.now()
                 fused = isinstance(op, FusedPrefixOp)
                 obs.tracer.span("prefix:fused" if fused
                                 else f"prefix:{op.name}", "prefix", t0,
-                                obs.now(), track=self._track, n=n)
+                                t1, track=self._track, n=n)
+                if n > 0:
+                    # measured per-op accounting keyed the way the cost
+                    # catalog keys predictions — what PlanAudit joins
+                    # against (wall µs per invocation; frames in; rows
+                    # surviving) to reconcile marginal cost + pass rate
+                    key = op_cost_key(op)
+                    obs.metrics.observe(f"op_wall_us/{key}",
+                                        (t1 - t0) / 1e3)
+                    obs.metrics.inc(f"op_frames/{key}", n)
+                    obs.metrics.inc(f"op_rows_out/{key}",
+                                    int(batch["frames"].shape[0]))
                 if fused:
                     # per-stage attribution: the chain collapsed to one
                     # dispatch, so surviving-row counts per fused stage
@@ -398,6 +411,32 @@ class MultiStreamRuntime:
                          for fs in self._feeds)
 
     # ------------------------------------------------------------------
+    def audit(self, tolerance: float = 0.5):
+        """A ``PlanAudit`` over this runtime's sharing forests, priced
+        with the planner's own catalog / micro-batch / gate-hit-rate —
+        call after ``run`` and join with ``self.obs.metrics`` for the
+        predicted-vs-measured decision table."""
+        from repro.obs.audit import PlanAudit
+        return PlanAudit.from_runtime(self, tolerance=tolerance)
+
+    #: drift tolerance for end-of-run cost reconciliation (relative)
+    reconcile_tolerance = 0.5
+    #: drift-flagged catalog keys from the most recent reconcile
+    drift_flags: List[str] = []
+
+    def _reconcile_costs(self) -> None:
+        """Close the audit loop: EMA-feed the run's measured op costs
+        (device-probed forwards, prefix-op walls) back into the
+        planner's catalog — the cost-model twin of the gate-hit-rate
+        feedback in ``_collect`` — and keep the drift flags for the
+        flight report.  No catalog, no measurements: no-op."""
+        catalog = getattr(self.planner, "catalog", None)
+        if catalog is None or not hasattr(catalog, "reconcile"):
+            return
+        audit = self.audit(tolerance=self.reconcile_tolerance)
+        self.drift_flags = audit.reconcile(self.obs.metrics, catalog)
+
+    # ------------------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
         """Aligned multi-feed checkpoint: per-feed source offsets + every
         group operator's state + the semantic gate's per-feed keyframes
@@ -406,6 +445,12 @@ class MultiStreamRuntime:
         completion and resumed first, so no channel holds data."""
         self._drain_all()
         assert not (self.server._queue or self.server._inflight)
+        if self.obs.enabled:
+            # the checkpoint is a natural audit boundary: everything
+            # launched has retired, so the measured surfaces are complete
+            # up to this instant — fold them into the catalog before the
+            # state is frozen
+            self._reconcile_costs()
         st: Dict[str, Any] = {"feeds": {}}
         for fs in self._feeds:
             st["feeds"][fs.name] = {
@@ -1009,6 +1054,10 @@ class MultiStreamRuntime:
             m.ingest("server", self.server.stats)
             m.set_gauge("run/wall_s", wall)
             m.set_gauge("run/fps", total_qframes / wall)
+            # a truncated trace looks complete in Perfetto — surface the
+            # tracer's overwrite count where dashboards actually look
+            m.counter("tracer/dropped_events").set(
+                getattr(self.obs.tracer, "dropped", 0))
             for name, fr in feeds.items():
                 m.counter(f"mllm_frames/{name}").set(fr.mllm_frames)
             if self._chaos:
@@ -1016,6 +1065,7 @@ class MultiStreamRuntime:
                     if fs.breaker is not None:
                         m.ingest(f"breaker/{fs.name}",
                                  fs.breaker.counters)
+            self._reconcile_costs()
         return MultiStreamResult(
             fps=total_qframes / wall,
             wall_s=wall,

@@ -391,3 +391,94 @@ def test_sharing_tree_execution_equals_independent(stream_ctx, data):
                               max_size=4, unique=True))
     seed = data.draw(st.integers(0, 2**16 - 1))
     assert_sharing_tree_equals_independent(stream_ctx, qids, seed)
+
+
+# ---------------------------------------------------------------------------
+# observability: histogram merge, SLO combine, snapshot round-trips
+# ---------------------------------------------------------------------------
+
+_values = st.floats(min_value=1e-4, max_value=1e9, allow_nan=False,
+                    allow_infinity=False)
+_records = st.lists(st.tuples(_values, st.integers(1, 50)), max_size=60)
+
+
+@given(a=_records, b=_records)
+@settings(**SETTINGS)
+def test_histogram_merge_equals_interleaved_recording(a, b):
+    """Bin-exact merge: folding two histograms equals recording the
+    interleaved value stream into one — counts array, totals and
+    min/max all identical, so merged percentiles are exact, not an
+    approximation of the per-feed ones."""
+    from repro.obs import Histogram
+    ha, hb, ref = Histogram(), Histogram(), Histogram()
+    for v, n in a:
+        ha.record(v, n)
+        ref.record(v, n)
+    for v, n in b:
+        hb.record(v, n)
+        ref.record(v, n)
+    ha.merge(hb)
+    assert np.array_equal(ha.counts, ref.counts)
+    assert ha.count == ref.count
+    assert ha.total == pytest.approx(ref.total, rel=1e-9, abs=1e-12)
+    if ref.count:
+        assert ha.vmin == ref.vmin and ha.vmax == ref.vmax
+        for p in (50, 95, 99):
+            assert ha.percentile(p) == ref.percentile(p)
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_slo_combined_equals_single_feed_recording(data):
+    """Workload-wide percentiles from ``combined()`` equal recording
+    every frame into one feed: the merge loses nothing."""
+    from repro.obs import Metrics, SLOTracker
+    lat = st.floats(min_value=0.01, max_value=1e5, allow_nan=False,
+                    allow_infinity=False)
+    feeds = data.draw(st.lists(st.sampled_from("abcd"), min_size=1,
+                               max_size=20))
+    latencies = data.draw(st.lists(lat, min_size=len(feeds),
+                                   max_size=len(feeds)))
+    split = SLOTracker(Metrics(), target_ms=100.0)
+    one = SLOTracker(Metrics(), target_ms=100.0)
+    for feed, l in zip(feeds, latencies):
+        split.record(feed, l)
+        one.record("all", l)
+    c = split.combined()
+    r = one.row("all")
+    assert c["frames"] == r["frames"]
+    assert c["violations"] == r["violations"]
+    for p in (50, 95, 99):
+        assert c[f"p{p}_ms"] == r[f"p{p}_ms"]
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_metrics_snapshot_restore_roundtrip_random_sequences(data):
+    """Snapshot → more traffic → restore returns every surface to its
+    recorded state, under arbitrary record sequences (the aligned-
+    checkpoint contract ``Metrics.restore`` promises)."""
+    from repro.obs import Metrics
+    names = st.sampled_from(["a", "b", "c/d"])
+    ops = st.lists(st.tuples(st.sampled_from(["inc", "gauge", "observe"]),
+                             names, _values), max_size=40)
+
+    def apply(m, seq):
+        for kind, name, v in seq:
+            if kind == "inc":
+                m.inc(name, int(v) % 100)
+            elif kind == "gauge":
+                m.set_gauge(name, v)
+            else:
+                m.observe(name, v)
+
+    m = Metrics()
+    apply(m, data.draw(ops))
+    snap = m.snapshot()
+    rows_before = m.to_rows()
+    apply(m, data.draw(ops))
+    m.restore(snap)
+    assert m.to_rows() == rows_before
+    # and restoring twice is idempotent
+    m.restore(snap)
+    assert m.to_rows() == rows_before
